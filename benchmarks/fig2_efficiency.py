@@ -1,0 +1,38 @@
+"""Paper Fig. 2: OCM mapping efficiency decreases as compute parallelism
+grows (same parameters, more/wider/shallower BRAMs)."""
+
+from __future__ import annotations
+
+from repro.core.buffers import Folding, LayerSpec, mvau_buffer
+
+
+def run() -> list[dict]:
+    # the paper's illustration: one conv layer at 1x / 2x / 4x parallelism
+    layer = LayerSpec("conv", c_in=256, c_out=256, k=3, out_pixels=196)
+    rows = []
+    for label, pe, simd in (("1x", 4, 8), ("2x", 8, 8), ("4x", 8, 16),
+                            ("8x", 16, 16), ("16x", 32, 16)):
+        buf = mvau_buffer(layer, Folding(pe, simd))
+        rows.append(
+            {
+                "bench": "fig2",
+                "parallelism": label,
+                "pe": pe,
+                "simd": simd,
+                "width_bits": buf.width_bits,
+                "depth_words": buf.depth_words,
+                "brams": buf.blocks(),
+                "efficiency_pct": round(100 * buf.efficiency(), 1),
+            }
+        )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    effs = [r["efficiency_pct"] for r in rows]
+    if not all(a >= b - 1e-9 for a, b in zip(effs, effs[1:])):
+        errs.append(f"efficiency should fall with parallelism: {effs}")
+    if rows[0]["brams"] >= rows[-1]["brams"]:
+        errs.append("BRAM count should grow with parallelism (Fig. 2)")
+    return errs

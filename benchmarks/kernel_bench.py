@@ -1,0 +1,77 @@
+"""Kernel-level benchmark: packed (FCMP) vs dense weight storage.
+
+On this CPU container wall-clock is not the metric (Pallas runs in
+interpret mode); the benchmark reports the *modeled* quantities that
+matter on the TPU target and verifies kernel/oracle agreement at each
+point of the sweep:
+
+  * HBM weight bytes per matmul call: dense bf16 vs packed 1/2-bit carrier
+    (the paper's OCM-efficiency gain mapped to the HBM roofline term),
+  * VMEM tile padding efficiency of the packed carrier (Eq. 1 analogue),
+  * VPU unpack ops per MXU flop (the "frequency compensation" cost).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.resource_model import TPU_V5E
+from repro.core.vmem_plan import WeightBlock
+
+
+SWEEP = [
+    # (K, N) layer shapes from the assigned archs
+    ("smollm_ffn", 960, 2560),
+    ("llama_ffn", 2048, 8192),
+    ("danube_ffn", 2560, 6912),
+    ("olmoe_expert", 2048, 1024),
+    ("moonshot_expert", 2048, 1408),
+    ("phi3_ffn", 5120, 17920),
+]
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, k, n in SWEEP:
+        dense_bytes = k * n * 2  # bf16
+        for bits in (1, 2):
+            blk = WeightBlock(name, k, n, bits)
+            packed = blk.padded_bytes(TPU_V5E)
+            per = 8 // bits
+            # unpack cost: ~2 VPU ops (shift+mask) per code, per/8 codes/byte
+            vpu_ops = k * n * 2
+            mxu_flops_per_row = 2 * k * n  # per activation row
+            rows.append(
+                {
+                    "bench": "kernel",
+                    "layer": name,
+                    "bits": bits,
+                    "dense_bf16_bytes": dense_bytes,
+                    "packed_bytes": packed,
+                    "traffic_reduction_x": round(dense_bytes / packed, 2),
+                    "tile_efficiency_pct": round(
+                        100 * blk.packing_efficiency(TPU_V5E), 1
+                    ),
+                    "vpu_ops_per_mxu_flop": round(
+                        vpu_ops / mxu_flops_per_row, 3
+                    ),
+                }
+            )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    for r in rows:
+        want = 16.0 if r["bits"] == 1 else 8.0
+        if not want * 0.8 <= r["traffic_reduction_x"] <= want * 1.05:
+            errs.append(
+                f"{r['layer']}@{r['bits']}b: traffic x{r['traffic_reduction_x']}"
+                f" (expected ~{want}x)"
+            )
+        if r["tile_efficiency_pct"] < 90:
+            errs.append(
+                f"{r['layer']}@{r['bits']}b: tile efficiency "
+                f"{r['tile_efficiency_pct']}% < 90%"
+            )
+    return errs

@@ -1,0 +1,32 @@
+"""Merge dry-run jsonl files: later records replace earlier ones with the
+same (arch, shape, mesh, quant) key. Used to splice re-measured cells into
+a sweep artifact after a targeted fix.
+
+    python benchmarks/merge_runs.py out.jsonl base.jsonl patch1.jsonl ...
+"""
+
+import json
+import sys
+
+
+def merge(paths: list[str]) -> list[dict]:
+    recs: dict[tuple, dict] = {}
+    order: list[tuple] = []
+    for p in paths:
+        with open(p) as fh:
+            for line in fh:
+                r = json.loads(line)
+                key = (r["arch"], r["shape"], r["mesh"], r.get("quant", 0))
+                if key not in recs:
+                    order.append(key)
+                recs[key] = r
+    return [recs[k] for k in order]
+
+
+if __name__ == "__main__":
+    out, *paths = sys.argv[1:]
+    rows = merge(paths)
+    with open(out, "w") as fh:
+        for r in rows:
+            fh.write(json.dumps(r) + "\n")
+    print(f"merged {len(paths)} files -> {out} ({len(rows)} records)")

@@ -1,0 +1,90 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts (jsonl)."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path: str) -> list[dict]:
+    with open(path) as fh:
+        return [json.loads(l) for l in fh]
+
+
+def fmt_bytes(b: float) -> str:
+    if b >= 2**30:
+        return f"{b/2**30:.1f} GiB"
+    if b >= 2**20:
+        return f"{b/2**20:.1f} MiB"
+    return f"{b/2**10:.0f} KiB"
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile s | temp bytes/dev | args bytes/dev | collectives (per-dev bytes) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "OK":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | | | | |"
+            )
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("coll_breakdown", {})
+        cs = ", ".join(
+            f"{k}:{fmt_bytes(v)}" for k, v in sorted(coll.items()) if v
+        ) or "none"
+        lines.append(
+            "| {arch} | {shape} | {mesh} | OK | {tc:.0f} | {tmp} | {arg} | {cs} |".format(
+                arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                tc=r["t_compile_s"],
+                tmp=fmt_bytes(mem.get("temp_size_in_bytes", 0)),
+                arg=fmt_bytes(mem.get("argument_size_in_bytes", 0)),
+                cs=cs,
+            )
+        )
+    return "\n".join(lines)
+
+
+MOVE_HINTS = {
+    "compute": "cut redundant matmul flops (remat policy, causal block skip)",
+    "memory": "shrink materialised intermediates (masks, f32 carriers) and fuse",
+    "collective": "reshard to cut all-gathers; overlap psum with compute",
+}
+
+
+def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | T_compute ms | T_memory ms | T_coll ms | bottleneck | MODEL_FLOPS/HLO | roofline % | to move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "OK":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} | — | — | — |"
+            )
+            continue
+        lines.append(
+            "| {arch} | {shape} | {tc:.2f} | {tm:.2f} | {tl:.2f} | {b} | {u:.3f} | {rf:.2f} | {hint} |".format(
+                arch=r["arch"], shape=r["shape"],
+                tc=r["t_compute_ms"], tm=r["t_memory_ms"],
+                tl=r["t_collective_ms"], b=r["bottleneck"],
+                u=r["useful_flops_ratio"],
+                rf=100 * r["roofline_fraction"],
+                hint=MOVE_HINTS.get(r["bottleneck"], ""),
+            )
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else
+                "experiments/dryrun_baseline.jsonl")
+    which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
+    if which == "roofline":
+        print(roofline_table(recs))
+    else:
+        print(dryrun_table(recs))

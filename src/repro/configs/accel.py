@@ -1,0 +1,91 @@
+"""FPGA accelerator configs for the paper's own designs (CNV, ResNet-50).
+
+An ``AccelConfig`` carries everything the FCMP methodology needs: the
+MVAU layer set, the target device, weight precision, the packing GA
+hyper-parameters (paper Table III), and the baseline operating clocks
+(paper Table V). ``buffers()`` derives the logical weight memories at a
+throughput-maximising folding, which is what the packing benchmarks and
+Table IV/V reproductions consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core.buffers import Folding, LayerSpec, buffer_set
+from repro.core.folding import FoldingSolution, search_folding
+from repro.core.packing import GaParams
+from repro.core.resource_model import DEVICES, FpgaDevice
+from repro.core.topologies import cnv_layers, resblock_slr_map, resnet50_layers
+
+
+@dataclasses.dataclass(frozen=True)
+class AccelConfig:
+    name: str
+    kind: str  # "cnv" | "rn50"
+    w_bits: int
+    a_bits: int
+    device: FpgaDevice
+    ga: GaParams
+    f_compute_mhz: float  # baseline compute clock (paper Table V)
+    f_memory_mhz: float  # target memory clock for H_B=4 (R_F = 2)
+    # The paper's folding solutions target a throughput design point
+    # (RN50: 2703 FPS at 195 MHz -> max II ~ 72k cycles); the search stops
+    # there instead of greedily filling the LUT budget, which reproduces
+    # the paper's buffer shapes (and hence its baseline OCM efficiency).
+    target_ii: int | None = None
+
+    @functools.cached_property
+    def layers(self) -> list[LayerSpec]:
+        if self.kind == "cnv":
+            return cnv_layers(self.w_bits)
+        return resnet50_layers(self.w_bits)
+
+    @functools.cached_property
+    def folding(self) -> FoldingSolution:
+        return search_folding(
+            self.layers, self.device, target_ii=self.target_ii
+        )
+
+    def buffers(self):
+        return buffer_set(self.layers, self.folding.foldings)
+
+    def regions(self) -> list[str]:
+        """SLR assignment (Alveo floorplan constraint; single region on Zynq)."""
+        if self.device.slrs <= 1:
+            return ["slr0"] * len(self.layers)
+        return resblock_slr_map(self.layers, self.device.slrs)
+
+
+def make_cnv(w_bits: int, device: str = "zynq7020") -> AccelConfig:
+    return AccelConfig(
+        name=f"cnv_w{w_bits}a{w_bits}",
+        kind="cnv",
+        w_bits=w_bits,
+        a_bits=w_bits,
+        device=DEVICES[device],
+        ga=GaParams(max_height=4, population=50, tournament=5,
+                    p_adm_w=0.0, p_adm_h=0.1, p_mut=0.3),
+        f_compute_mhz=100.0,
+        f_memory_mhz=200.0,
+        # BNN-Pynq CNV bottleneck: conv1 at PE=32/SIMD=32 -> 36 folds x
+        # 28^2 pixels = 28224 cycles (~3500 FPS at 100 MHz)
+        target_ii=28_224,
+    )
+
+
+def make_rn50(w_bits: int, device: str = "u250") -> AccelConfig:
+    return AccelConfig(
+        name=f"rn50_w{w_bits}a2",
+        kind="rn50",
+        w_bits=w_bits,
+        a_bits=2,
+        device=DEVICES[device],
+        ga=GaParams(max_height=4, population=75, tournament=5,
+                    p_adm_w=0.0, p_adm_h=0.1, p_mut=0.4),
+        f_compute_mhz=200.0,
+        f_memory_mhz=400.0,
+        # paper Table II: 2703 FPS at 195 MHz -> max II ~ 72k cycles
+        target_ii=72_000,
+    )

@@ -1,0 +1,69 @@
+"""FCMP core: the paper's contribution as a composable library.
+
+- ``resource_model``: BRAM/URAM/device geometry, LUT-overhead model
+- ``buffers``: FINN MVAU weight-buffer shapes from (layer, folding)
+- ``packing``: FFD / annealing / genetic buffer-to-BRAM packing
+- ``gals``: frequency-compensation (R_F, H_B, delta_FPS) model
+- ``efficiency``: Eq. 1 reports
+- ``folding``: folding-solution search
+- ``dataflow``: pipeline FPS/latency/TOp/s model
+- ``topologies``: CNV + ResNet-50 layer sets
+- ``vmem_plan``: TPU adaptation (VMEM residency packing)
+"""
+
+from repro.core.buffers import (  # noqa: F401
+    Folding,
+    LayerSpec,
+    WeightBuffer,
+    buffer_set,
+    mvau_buffer,
+    mvau_cycles,
+)
+from repro.core.dataflow import PipelineModel, balance_report  # noqa: F401
+from repro.core.efficiency import (  # noqa: F401
+    MemSubsystemReport,
+    baseline_report,
+    device_utilization,
+    report,
+)
+from repro.core.folding import FoldingSolution, search_folding  # noqa: F401
+from repro.core.gals import (  # noqa: F401
+    GalsOperatingPoint,
+    folding_delta_fps,
+    max_bin_height,
+    needs_odd_even_split,
+    required_rf,
+    virtual_ports,
+)
+from repro.core.packing import (  # noqa: F401
+    GA_PARAMS_CNV,
+    GA_PARAMS_RN50,
+    GaParams,
+    PackItem,
+    Packing,
+    baseline_packing,
+    bin_cost,
+    pack_anneal,
+    pack_ffd,
+    pack_genetic,
+)
+from repro.core.resource_model import (  # noqa: F401
+    BRAM18,
+    DEVICES,
+    TPU_V5E,
+    FpgaDevice,
+    RamPrimitive,
+    TpuChip,
+    URAM,
+    fcmp_lut_overhead,
+)
+from repro.core.topologies import (  # noqa: F401
+    cnv_layers,
+    resblock_slr_map,
+    resnet50_layers,
+)
+from repro.core.vmem_plan import (  # noqa: F401
+    ResidencyPlan,
+    WeightBlock,
+    plan_vmem_residency,
+)

@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices stand in for 2 pods x 256 chips,
+``jax.jit(step).lower(**input_specs).compile()`` must succeed for every
+cell, and the compiled artifact yields the memory analysis, cost analysis
+and collective schedule consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe_1b_7b \
+        --shape train_4k --multi-pod --json out.jsonl
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, ModelConfig, shape_applicable
+from repro.optim.adamw import AdamW
+from repro.perf.roofline import model_flops, roofline
+from repro.runtime.steps import make_prefill_step, make_serve_step, make_train_step
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape_name: str,
+    mesh,
+    *,
+    remat: str = "full",
+    ce_chunk: int = 512,
+    donate: bool = True,
+    constraints: bool = True,
+):
+    """Lower one (arch, shape) cell on ``mesh``. Returns (lowered, meta)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.lm import set_attn_batch_sharding
+
+    shape = SHAPES[shape_name]
+    opt = AdamW()
+    # §Perf iteration 5: when heads don't divide TP, GSPMD replicates the
+    # attention math across the model axis; reshard it batch-wise over the
+    # full mesh instead (only when the batch divides the mesh).
+    tp = mesh.shape.get("model", 1)
+    set_attn_batch_sharding(None)
+    if (
+        constraints
+        and cfg.n_heads % tp != 0
+        and shape.kind in ("train", "prefill")
+    ):
+        # largest axis combination the batch divides: on the 2-pod mesh a
+        # 256-batch reshards over (data, model) and stays replicated over
+        # 'pod' (plain DP) — without the fallback the multi-pod cells
+        # regress to 16x-replicated attention.
+        for axes in (
+            tuple(mesh.axis_names),
+            ("data", "model"),
+            ("data",),
+        ):
+            axes = tuple(a for a in axes if a in mesh.axis_names)
+            sz = 1
+            for a in axes:
+                sz *= mesh.shape[a]
+            if "model" in axes and shape.global_batch % sz == 0:
+                set_attn_batch_sharding(P(axes))
+                break
+    # §Perf iteration 8: sequence-sharded prefill attention when the batch
+    # reshard above was not applicable (e.g. prefill batch 32 on 256 dev).
+    from repro.models.lm import _ATTN_BATCH_SHARD, set_attn_seq_sharding
+
+    set_attn_seq_sharding(None)
+    if (
+        constraints
+        and cfg.n_heads % tp != 0
+        and shape.kind == "prefill"
+        and _ATTN_BATCH_SHARD["spec"] is None
+        and shape.seq_len % tp == 0
+    ):
+        set_attn_seq_sharding(mesh)
+    # §Perf iteration 6: pin MoE dispatch tensors to the expert axis
+    from repro.models.moe import set_moe_ep_axis
+
+    set_moe_ep_axis(
+        "model"
+        if constraints and cfg.family == "moe" and cfg.n_experts % tp == 0
+        else None
+    )
+    # §Perf iteration 7: split-d decode attention keeps the cache resident
+    # in its head_dim-sharded layout when KV heads don't divide TP.
+    from repro.models.lm import set_decode_split_d
+
+    set_decode_split_d(None)
+    if (
+        constraints
+        and shape.kind == "decode"
+        and cfg.n_kv % tp != 0
+        and cfg.hd % tp == 0
+        and shape.global_batch % (mesh.size // tp) == 0
+    ):
+        set_decode_split_d(mesh)
+    if shape.kind == "train":
+        step = make_train_step(cfg, opt, remat=remat, ce_chunk=ce_chunk)
+        p_sh = S.param_shardings(cfg, mesh)
+        o_sh = S.opt_shardings(cfg, mesh, opt)
+        b_sh = S.batch_shardings(cfg, shape, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        args = (
+            S.abstract_params(cfg),
+            S.abstract_opt_state(cfg, opt),
+            S.abstract_batch(cfg, shape),
+        )
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                S.param_shardings(cfg, mesh),
+                S.batch_shardings(cfg, shape, mesh),
+            ),
+        )
+        args = (S.abstract_params(cfg), S.abstract_batch(cfg, shape))
+    else:  # decode
+        step = make_serve_step(cfg)
+        c_sh = S.cache_shardings(cfg, shape, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                S.param_shardings(cfg, mesh),
+                S.token_shardings(cfg, shape, mesh),
+                c_sh,
+            ),
+            out_shardings=(None, c_sh),
+            donate_argnums=(2,) if donate else (),
+        )
+        args = (
+            S.abstract_params(cfg),
+            S.abstract_token(cfg, shape),
+            S.abstract_cache(cfg, shape),
+        )
+    with mesh:
+        lowered = jitted.lower(*args)
+    return lowered, {"kind": shape.kind}
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    remat: str = "full",
+    ce_chunk: int = 512,
+    quant: int = 0,
+    constraints: bool = True,
+    verbose: bool = True,
+) -> dict:
+    """Lower + compile one cell; return the §Dry-run / §Roofline record."""
+    cfg = get_config(arch)
+    if quant:
+        cfg = dataclasses.replace(cfg, w_bits=quant)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": why,
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.monotonic()
+    lowered, meta = lower_cell(
+        cfg, shape_name, mesh, remat=remat, ce_chunk=ce_chunk,
+        constraints=constraints,
+    )
+    t_lower = time.monotonic() - t0
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for f in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(mem, f, None)
+        if v is not None:
+            mem_rec[f] = int(v)
+
+    rl = roofline(
+        f"{arch}/{shape_name}", compiled, cfg, shape, n_dev
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK",
+        "kind": meta["kind"],
+        "quant": quant,
+        "remat": remat,
+        "t_lower_s": round(t_lower, 1),
+        "t_compile_s": round(t_compile, 1),
+        "memory": mem_rec,
+        "flops_per_dev": rl.flops,
+        "hbm_bytes_per_dev": rl.hbm_bytes,
+        "coll_bytes_per_dev": rl.coll_bytes,
+        "coll_breakdown": rl.coll_breakdown,
+        "model_flops": rl.model_flops,
+        "t_compute_ms": rl.t_compute * 1e3,
+        "t_memory_ms": rl.t_memory * 1e3,
+        "t_collective_ms": rl.t_collective * 1e3,
+        "bottleneck": rl.bottleneck,
+        "useful_flops_ratio": rl.useful_flops_ratio,
+        "roofline_fraction": rl.roofline_fraction,
+    }
+    if verbose:
+        print(
+            f"[dryrun] {arch:22s} {shape_name:12s} {rec['mesh']:8s} OK  "
+            f"lower {t_lower:5.1f}s compile {t_compile:6.1f}s  "
+            f"Tc {rec['t_compute_ms']:8.2f}ms Tm {rec['t_memory_ms']:8.2f}ms "
+            f"Tcoll {rec['t_collective_ms']:8.2f}ms -> {rec['bottleneck']}",
+            flush=True,
+        )
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["none", "dots", "full"])
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    ap.add_argument("--quant", type=int, default=0, choices=[0, 1, 2])
+    ap.add_argument("--attn-impl", default="fa2", choices=["fa2", "scan"])
+    ap.add_argument(
+        "--no-constraints", action="store_true",
+        help="disable the Perf-iteration sharding hooks (paper-faithful "
+        "baseline measurements)",
+    )
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+
+    from repro.models.attention import set_attn_impl
+
+    set_attn_impl(args.attn_impl)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(
+                        arch, shape, multi_pod=mp, remat=args.remat,
+                        ce_chunk=args.ce_chunk, quant=args.quant,
+                        constraints=not args.no_constraints,
+                    )
+                except Exception as e:  # noqa: BLE001 — report all failures
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": f"FAIL: {type(e).__name__}: {e}",
+                    }
+                    failures.append(rec)
+                    print(f"[dryrun] {arch} {shape} FAILED: {e}", flush=True)
+                records.append(rec)
+
+    if args.json:
+        with open(args.json, "a") as fh:
+            for r in records:
+                fh.write(json.dumps(r) + "\n")
+    n_ok = sum(1 for r in records if r["status"] == "OK")
+    n_skip = sum(1 for r in records if r["status"].startswith("SKIP"))
+    print(f"[dryrun] {n_ok} OK, {n_skip} skipped, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

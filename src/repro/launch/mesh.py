@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count locks on first jax init, and smoke
+tests must see 1 CPU device while the dry-run sees 512 placeholders).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: 'data' carries DP (+ sequence parallelism for the batch=1 long-
+    context cells), 'model' carries TP/EP, 'pod' is the outer DP axis whose
+    collectives cross the inter-pod DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (tests use small shapes on forced host devices)."""
+    return jax.make_mesh(shape, axes)

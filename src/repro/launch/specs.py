@@ -1,0 +1,126 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns abstract (no-allocation) stand-ins for
+every model input of the step kind the shape dictates (train/prefill lower
+the full-sequence step; decode shapes lower ``serve_step`` with a KV cache
+/ SSM state of seq_len). ``cell_shardings`` pairs them with the policy
+shardings for a mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.dist import sharding as shd
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import AdamW
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Train/prefill batch stand-ins: {tokens, labels[, modality stub]}."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        out["prefix_embeds"] = _sds(
+            (b, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.family == "encdec":
+        out["frames"] = _sds(
+            (b, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return out
+
+
+def abstract_params(cfg: ModelConfig):
+    return lm.abstract_params(cfg)
+
+
+def abstract_opt_state(cfg: ModelConfig, opt: AdamW | None = None):
+    opt = opt or AdamW()
+    return jax.eval_shape(opt.init, abstract_params(cfg))
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-state stand-ins at the cell's (batch, seq_len)."""
+    fn = functools.partial(
+        lm.init_cache, cfg, shape.global_batch, shape.seq_len
+    )
+    cache = jax.eval_shape(fn)
+    if cfg.family == "encdec":
+        b = shape.global_batch
+        kv = (cfg.n_layers, b, cfg.frontend_len, cfg.n_kv, cfg.hd)
+        cache = dict(cache)
+        cache["cross_k"] = _sds(kv, jnp.dtype(cfg.dtype))
+        cache["cross_v"] = _sds(kv, jnp.dtype(cfg.dtype))
+    return cache
+
+
+def abstract_token(cfg: ModelConfig, shape: ShapeConfig):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """All abstract inputs for the cell's step kind."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": abstract_batch(cfg, shape)}
+    return {
+        "token": abstract_token(cfg, shape),
+        "cache": abstract_cache(cfg, shape),
+    }
+
+
+# --------------------------------------------------------------------------
+# Shardings
+# --------------------------------------------------------------------------
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    specs = shd.batch_specs(cfg, mesh, shape.global_batch)
+    b = abstract_batch(cfg, shape)
+    return _named(mesh, {k: specs[k] for k in b})
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    return _named(mesh, shd.param_specs(cfg, mesh))
+
+
+def opt_shardings(cfg: ModelConfig, mesh, opt: AdamW | None = None):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.optim.adamw import OptState
+
+    pspec = shd.param_specs(cfg, mesh)
+    return _named(
+        mesh, OptState(step=P(), mu=pspec, nu=pspec)
+    )
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    specs = shd.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    cache = abstract_cache(cfg, shape)
+    if cfg.family == "encdec":
+        specs = dict(specs)
+    return _named(mesh, {k: specs[k] for k in cache})
+
+
+def token_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    return NamedSharding(
+        mesh, shd.token_spec(cfg, mesh, shape.global_batch)
+    )

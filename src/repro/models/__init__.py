@@ -1,0 +1,9 @@
+"""Model zoo: unified LM family + encoder-decoder + the paper's CNNs."""
+
+from repro.models.config import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    reduced,
+    shape_applicable,
+)

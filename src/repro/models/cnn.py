@@ -1,0 +1,198 @@
+"""The paper's own models in JAX: CNV (BNN-Pynq) and quantized ResNet-50.
+
+Two execution paths per model, mirroring the paper's §III:
+  * **QAT training path** — float graph with STE weight quantizers
+    (binary/ternary inside blocks, 8-bit first/last) and LSQ activations,
+    BN before every quantized activation (``quant.quantizers``).
+  * **Streamlined dataflow path** — the FPGA datapath: BN+activation folded
+    into integer thresholds (``quant.streamline``), convolutions lowered to
+    im2col + the fused packed ``mvau`` kernel. Bit-exact vs the QAT graph
+    at matching parameters (tested), and the thing the FCMP packing planner
+    operates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig  # noqa: F401  (public surface)
+from repro.quant.quantizers import init_act_scale, int_act, quantize_weight
+from repro.quant.streamline import ThresholdSpec, bn_act_to_thresholds, thresholding
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    c_in: int
+    c_out: int
+    k: int
+    stride: int = 1
+    pad: int = 0
+    w_bits: int = 1
+    a_bits: int = 2
+    pool: bool = False  # 2x2 maxpool after activation
+
+
+def cnv_topology(w_bits: int = 1, a_bits: int = 2) -> list[ConvSpec]:
+    """BNN-Pynq CNV: 6 valid convs + 2 maxpools + 3 FC (paper §V)."""
+    return [
+        ConvSpec("conv0", 3, 64, 3, w_bits=8, a_bits=a_bits),
+        ConvSpec("conv1", 64, 64, 3, w_bits=w_bits, a_bits=a_bits, pool=True),
+        ConvSpec("conv2", 64, 128, 3, w_bits=w_bits, a_bits=a_bits),
+        ConvSpec("conv3", 128, 128, 3, w_bits=w_bits, a_bits=a_bits, pool=True),
+        ConvSpec("conv4", 128, 256, 3, w_bits=w_bits, a_bits=a_bits),
+        ConvSpec("conv5", 256, 256, 3, w_bits=w_bits, a_bits=a_bits),
+        ConvSpec("fc0", 256, 512, 1, w_bits=w_bits, a_bits=a_bits),
+        ConvSpec("fc1", 512, 512, 1, w_bits=w_bits, a_bits=a_bits),
+        ConvSpec("fc2", 512, 10, 1, w_bits=8, a_bits=0),  # logits
+    ]
+
+
+def init_cnn_params(specs: list[ConvSpec], key: jax.Array) -> dict:
+    params: dict[str, Any] = {}
+    keys = jax.random.split(key, len(specs))
+    for sp, k in zip(specs, keys):
+        fan_in = sp.k * sp.k * sp.c_in
+        params[sp.name] = {
+            "w": jax.random.normal(k, (sp.k, sp.k, sp.c_in, sp.c_out))
+            * (fan_in**-0.5),
+            "bn_gamma": jnp.ones((sp.c_out,)),
+            "bn_beta": jnp.zeros((sp.c_out,)),
+            "bn_mu": jnp.zeros((sp.c_out,)),
+            "bn_var": jnp.ones((sp.c_out,)),
+            "act_scale": init_act_scale(max(sp.a_bits, 2)),
+        }
+    return params
+
+
+def _conv(x, w, stride, pad):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(
+    params: dict, specs: list[ConvSpec], x: jnp.ndarray, train: bool = True
+) -> jnp.ndarray:
+    """QAT float path. x: (B, H, W, C). Returns logits (B, n_classes)."""
+    for i, sp in enumerate(specs):
+        p = params[sp.name]
+        if sp.k == 1 and x.ndim == 4 and x.shape[1] * x.shape[2] > 1 and i > 0:
+            # first FC flattens the spatial map
+            x = x.reshape(x.shape[0], 1, 1, -1)
+            # (flatten keeps channel count: CNV pools to 1x1 before fc0)
+        w = quantize_weight(p["w"], sp.w_bits)
+        x = _conv(x, w, sp.stride, sp.pad)
+        if sp.a_bits > 0:
+            mu, var = p["bn_mu"], p["bn_var"]
+            if train:
+                axes = (0, 1, 2)
+                mu = jnp.mean(x, axis=axes)
+                var = jnp.var(x, axis=axes)
+            z = p["bn_gamma"] * (x - mu) / jnp.sqrt(var + 1e-5) + p["bn_beta"]
+            x = int_act(z, p["act_scale"], sp.a_bits)
+        if sp.pool:
+            x = _maxpool2(x)
+    return x.reshape(x.shape[0], -1)
+
+
+def streamline_params(params: dict, specs: list[ConvSpec]) -> dict:
+    """Fold BN+act into thresholds per layer (paper §III-B)."""
+    out = {}
+    for sp in specs:
+        p = params[sp.name]
+        entry: dict[str, Any] = {"w": quantize_weight(p["w"], sp.w_bits)}
+        if sp.a_bits > 0:
+            entry["thresholds"] = bn_act_to_thresholds(
+                p["bn_gamma"], p["bn_beta"], p["bn_mu"], p["bn_var"],
+                p["act_scale"], sp.a_bits,
+            )
+        out[sp.name] = entry
+    return out
+
+
+def cnn_forward_streamlined(
+    sparams: dict, specs: list[ConvSpec], x: jnp.ndarray
+) -> jnp.ndarray:
+    """Dataflow path: conv -> integer thresholding (no BN, no float act).
+
+    Bit-exact vs ``cnn_forward(train=False)`` given the same parameters.
+    """
+    for i, sp in enumerate(specs):
+        p = sparams[sp.name]
+        if sp.k == 1 and x.ndim == 4 and x.shape[1] * x.shape[2] > 1 and i > 0:
+            x = x.reshape(x.shape[0], 1, 1, -1)
+        x = _conv(x, p["w"], sp.stride, sp.pad)
+        if sp.a_bits > 0:
+            spec: ThresholdSpec = p["thresholds"]
+            x = thresholding(x, spec)
+        if sp.pool:
+            x = _maxpool2(x)
+    return x.reshape(x.shape[0], -1)
+
+
+def im2col(x: jnp.ndarray, k: int, stride: int = 1, pad: int = 0):
+    """(B, H, W, C) -> (B*Ho*Wo, k*k*C) patches — the MVAU input stream."""
+    b, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - k) // stride + 1
+    wo = (w + 2 * pad - k) // stride + 1
+    idx_h = jnp.arange(ho) * stride
+    idx_w = jnp.arange(wo) * stride
+    patches = jnp.stack(
+        [
+            xp[:, i + di, j + dj]
+            for di in range(k)
+            for dj in range(k)
+            for i, j in [(idx_h[:, None], idx_w[None, :])]
+        ],
+        axis=-2,
+    )  # (B, Ho, Wo, k*k, C)
+    return patches.reshape(b * ho * wo, k * k * c), (b, ho, wo)
+
+
+def conv_as_mvau(
+    x: jnp.ndarray, w: jnp.ndarray, spec: ThresholdSpec, w_bits: int,
+    stride: int = 1, pad: int = 0, use_kernel: bool = True,
+):
+    """Convolution on the streamlined datapath via im2col + fused MVAU
+    kernel (packed weights + thresholding) — the FINN execution model."""
+    from repro.kernels import ops
+
+    k, _, c_in, c_out = w.shape
+    cols, (b, ho, wo) = im2col(x, k, stride, pad)
+    wm = w.reshape(k * k * c_in, c_out)
+    if use_kernel and w_bits in (1, 2):
+        # per-channel magnitude folds into the thresholds: T' = T / alpha
+        alpha = jnp.max(jnp.abs(wm), axis=0)
+        alpha = jnp.where(alpha == 0, 1.0, alpha)
+        packed = ops.pack_weights(wm / alpha[None, :], w_bits)
+        thr = spec.thresholds / alpha[:, None]
+        levels = ops.mvau(
+            cols, packed, thr, spec.signs,
+            bits=w_bits, k=k * k * c_in, offset=int(spec.offset),
+        )
+    else:
+        acc = cols @ wm
+        levels = (
+            jnp.sum(
+                (acc * spec.signs[None] )[..., None] >= spec.thresholds[None],
+                axis=-1,
+            )
+            + int(spec.offset)
+        )
+    vals = levels.astype(jnp.float32) * spec.scale
+    return vals.reshape(b, ho, wo, c_out)

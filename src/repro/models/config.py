@@ -1,0 +1,205 @@
+"""Unified model configuration for every assigned architecture.
+
+One ``ModelConfig`` describes the whole LM family: dense GQA transformers,
+MoE, SSM (Mamba2/SSD), hybrid (Zamba2), encoder-decoder (Whisper backbone)
+and VLM (InternVL2 backbone). ``family`` selects the layer recipe; unused
+fields stay at their zero defaults.
+
+Weight quantization (``w_bits``) plugs the paper's packed-weight technique
+into any architecture: 1/2-bit weights are stored in the uint8 carrier
+format consumed by ``kernels.packed_matmul`` — the TPU analogue of the
+paper's optimally-packed BRAMs (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    sliding_window: int = 0  # 0 -> full attention
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    # --- hybrid (Zamba2): one shared attention block every k SSM layers ---
+    hybrid_attn_every: int = 0
+    # --- encoder-decoder (Whisper backbone) ---
+    n_enc_layers: int = 0
+    frontend_len: int = 0  # stubbed frontend sequence length (frames/patches)
+    # --- vlm ---
+    n_patches: int = 0  # stubbed image-patch prefix length
+    # --- common ---
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    vocab_pad: int = 256  # pad vocab so ('model',) sharding always divides
+    w_bits: int = 0  # 0 = dense bf16/f32 weights; 1/2 = packed (FCMP analogue)
+    dtype: Any = "bfloat16"
+
+    # ---------------- derived ----------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab, self.vocab_pad)
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: SSM, hybrid, or sliding-window attention."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned family decodes (whisper has a decoder)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding included once if tied)."""
+        d, ff, v = self.d_model, self.d_ff, self.padded_vocab
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv
+        attn = d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+        dense_ffn = 3 * d * ff
+        per_layer = 0
+        if self.family in ("dense", "vlm", "encdec"):
+            per_layer = attn + dense_ffn + 2 * d
+        elif self.family == "moe":
+            per_layer = (
+                attn + self.n_experts * dense_ffn + d * self.n_experts + 2 * d
+            )
+        elif self.family in ("ssm", "hybrid"):
+            di, st, nhs = self.d_inner, self.ssm_state, self.ssm_heads
+            ssm = (
+                d * (2 * di + 2 * st + nhs)  # in-proj (z, x, B, C, dt)
+                + self.conv_kernel * (di + 2 * st)  # causal conv
+                + di * d  # out-proj
+                + 2 * nhs  # A_log, D
+                + di  # gate norm
+            )
+            per_layer = ssm + 2 * d
+        total = self.n_layers * per_layer
+        if self.family == "hybrid":
+            n_shared = self.n_layers // max(1, self.hybrid_attn_every)
+            shared = attn + dense_ffn + 2 * self.d_model
+            total += shared  # one copy, reused n_shared times
+        if self.family == "encdec":
+            # encoder self-attn + cross-attn in decoder
+            total += self.n_enc_layers * (attn + dense_ffn + 2 * d)
+            total += self.n_layers * (attn + 2 * d)  # cross-attention
+        emb = v * d
+        total += emb if self.tie_embeddings else 2 * emb
+        return total
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE activates top-k of E experts)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        inactive = (
+            self.n_layers
+            * (self.n_experts - self.experts_per_token)
+            * 3
+            * d
+            * ff
+        )
+        return self.n_params() - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape) cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason string when skipped
+    (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "SKIP(full-attention: 500k dense KV is sub-quadratic-only)"
+    if cfg.family == "encdec" and shape.name == "long_500k":
+        return False, "SKIP(full-attention: 500k dense KV is sub-quadratic-only)"
+    return True, ""
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test-sized config of the same family (CPU-runnable)."""
+    small = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=128,
+        n_heads=4,
+        n_kv=min(cfg.n_kv, 2) if cfg.n_kv < cfg.n_heads else 4,
+        head_dim=32,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab=512,
+        vocab_pad=64,
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2)
+        if cfg.experts_per_token
+        else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=32 if cfg.ssm_state else 64,
+        ssm_chunk=16,
+        hybrid_attn_every=min(cfg.hybrid_attn_every, 2)
+        if cfg.hybrid_attn_every
+        else 0,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        frontend_len=min(cfg.frontend_len, 32) if cfg.frontend_len else 0,
+        n_patches=min(cfg.n_patches, 16) if cfg.n_patches else 0,
+        dtype="float32",
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **small)

@@ -1,0 +1,682 @@
+"""Unified LM-family model: dense / MoE / SSM / hybrid / VLM, one codebase.
+
+Design (DESIGN.md §2): one parameter pytree with *stacked* per-layer leaves
+(leading axis = layer) consumed by ``lax.scan`` — this keeps HLO size and
+compile time flat in depth (80-layer internvl2 compiles as fast as 16-layer
+olmoe), and it is what makes the 512-device dry-run tractable on a CPU
+host.
+
+Entry points:
+  * ``init_params(cfg, key)``      — real arrays (smoke tests / training)
+  * ``abstract_params(cfg)``       — ShapeDtypeStructs (dry-run, no alloc)
+  * ``forward(params, cfg, tokens, ...)``      — train/prefill logits
+  * ``init_cache(cfg, batch, max_len)``        — decode state
+  * ``prefill(params, cfg, tokens, cache)``    — fill cache, return logits
+  * ``decode_step(params, cfg, token, cache)`` — one-token serve step
+
+The FCMP packed-weight path: with ``cfg.w_bits`` in {1, 2} the FFN weight
+leaves are stored as uint8 carriers + per-channel scales (8x/4x fewer HBM
+bytes — the paper's OCM packing, DESIGN.md §3) and are decoded next to the
+matmul. The decode is pure-jnp here so it lowers through GSPMD for the
+dry-run; the Pallas ``packed_matmul`` kernel is the TPU execution path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    cross_entropy,
+    dense,
+    embed,
+    logits as unembed_logits,
+    rms_norm,
+    swiglu,
+)
+
+
+# --------------------------------------------------------------------------
+# Packed (FCMP) weight leaves
+# --------------------------------------------------------------------------
+
+
+def _pack_leaf_shapes(shape: tuple[int, ...], bits: int):
+    """(..., K, N) weight -> carrier (..., K*bits/8, N) uint8 + scale (...,N)."""
+    *lead, k, n = shape
+    per = 8 // bits
+    assert k % per == 0, (shape, bits)
+    return tuple(lead) + (k // per, n), tuple(lead) + (n,)
+
+
+def make_packed(w: jnp.ndarray, bits: int) -> dict[str, jnp.ndarray]:
+    """Quantize + pack a float weight (..., K, N) into the carrier format."""
+    from repro.quant.quantizers import pack_bits
+
+    axes = tuple(range(w.ndim - 1))
+    if bits == 1:
+        scale = jnp.mean(jnp.abs(w), axis=-2)  # (..., N)
+        codes = (w > 0).astype(jnp.uint8)
+    else:
+        mean_abs = jnp.mean(jnp.abs(w), axis=-2, keepdims=True)
+        delta = 0.7 * mean_abs
+        mask = jnp.abs(w) > delta
+        scale = jnp.sum(jnp.abs(w) * mask, axis=-2) / jnp.maximum(
+            jnp.sum(mask, axis=-2), 1.0
+        )
+        codes = (jnp.sign(w) * mask + 1).astype(jnp.uint8)
+    per = 8 // bits
+    k = w.shape[-2]
+    # pack along axis -2
+    moved = jnp.moveaxis(codes, -2, 0)
+    packed = pack_bits(moved, bits)
+    packed = jnp.moveaxis(packed, 0, -2)
+    return {"packed": packed, "scale": scale.astype(jnp.float32)}
+
+
+def _unpack_codes(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """uint8 carrier (..., Kc, N) -> codes (..., Kc*per, N) along axis -2."""
+    per = 8 // bits
+    mask = jnp.uint8(2**bits - 1)
+    shifts = jnp.arange(per, dtype=jnp.uint8) * bits
+    planes = (packed[..., None, :] >> shifts[:, None]) & mask  # (...,Kc,per,N)
+    new_shape = packed.shape[:-2] + (packed.shape[-2] * per, packed.shape[-1])
+    return planes.reshape(new_shape)
+
+
+def packed_dense(x: jnp.ndarray, w: Any, bits: int) -> jnp.ndarray:
+    """Matmul against a dense or packed weight leaf."""
+    if not isinstance(w, dict):
+        return dense(x, w)
+    codes = _unpack_codes(w["packed"], bits).astype(x.dtype)
+    vals = codes * 2.0 - 1.0 if bits == 1 else codes - 1.0
+    out = jnp.einsum("...k,kn->...n", x, vals)
+    return out * w["scale"].astype(x.dtype)
+
+
+def packed_swiglu(x, w1, w3, w2, bits: int):
+    h = jax.nn.silu(packed_dense(x, w1, bits)) * packed_dense(x, w3, bits)
+    return packed_dense(h, w2, bits)
+
+
+# --------------------------------------------------------------------------
+# Parameter initialisation
+# --------------------------------------------------------------------------
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _maybe_pack(w: jnp.ndarray, cfg: ModelConfig):
+    if cfg.w_bits in (1, 2):
+        return make_packed(w, cfg.w_bits)
+    return w
+
+
+def _init_attn(key, cfg: ModelConfig, n: int, d: int):
+    """Stacked attention projections for ``n`` layers over width ``d``."""
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    dt = _dt(cfg)
+    return {
+        "wq": (jax.random.normal(ks[0], (n, d, hq * hd), dt) * s),
+        "wk": (jax.random.normal(ks[1], (n, d, hkv * hd), dt) * s),
+        "wv": (jax.random.normal(ks[2], (n, d, hkv * hd), dt) * s),
+        "wo": (jax.random.normal(ks[3], (n, hq * hd, d), dt) * s),
+    }
+
+
+def _init_ffn(key, cfg: ModelConfig, n: int, d: int, ff: int, lead=()):
+    ks = jax.random.split(key, 3)
+    s = d ** -0.5
+    dt = _dt(cfg)
+    shp1 = (n,) + lead + (d, ff)
+    shp2 = (n,) + lead + (ff, d)
+    # FCMP packing applies to the dense-FFN families; the MoE expert
+    # einsums consume dense stacked weights (lead = (E,)), so packed
+    # carriers are not produced for them.
+    pack = _maybe_pack if not lead else (lambda w, _cfg: w)
+    return {
+        "w1": pack(jax.random.normal(ks[0], shp1, dt) * s, cfg),
+        "w3": pack(jax.random.normal(ks[1], shp1, dt) * s, cfg),
+        "w2": pack(jax.random.normal(ks[2], shp2, dt) * s * 0.5, cfg),
+    }
+
+
+def _init_ssm(key, cfg: ModelConfig, n: int):
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h, k = cfg.ssm_heads, cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    dt = _dt(cfg)
+    return {
+        "in_z": jax.random.normal(ks[0], (n, d, di), dt) * s,
+        "in_x": jax.random.normal(ks[1], (n, d, di), dt) * s,
+        "in_b": jax.random.normal(ks[2], (n, d, st), dt) * s,
+        "in_c": jax.random.normal(ks[3], (n, d, st), dt) * s,
+        "in_dt": jax.random.normal(ks[4], (n, d, h), dt) * s,
+        "dt_bias": jnp.zeros((n, h), jnp.float32),
+        "conv_x": jax.random.normal(ks[5], (n, k, di), dt) * 0.3,
+        "conv_b": jax.random.normal(ks[6], (n, k, st), dt) * 0.3,
+        "conv_c": jax.random.normal(ks[7], (n, k, st), dt) * 0.3,
+        "a_log": jnp.zeros((n, h), jnp.float32),  # A = -1
+        "d_skip": jnp.ones((n, h), jnp.float32),
+        "gate_norm": jnp.ones((n, di), jnp.float32),
+        "out": jax.random.normal(ks[5], (n, di, d), dt) * di**-0.5,
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d, ff, l = cfg.d_model, cfg.d_ff, cfg.n_layers
+    pv = cfg.padded_vocab
+    keys = jax.random.split(key, 8)
+    dt = _dt(cfg)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[0], (pv, d), dt) * 0.02,
+        "final_norm": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(keys[1], (pv, d), dt) * 0.02
+
+    if cfg.family in ("dense", "vlm"):
+        params["layers"] = {
+            "ln1": jnp.ones((l, d), jnp.float32),
+            "ln2": jnp.ones((l, d), jnp.float32),
+            **_init_attn(keys[2], cfg, l, d),
+            **_init_ffn(keys[3], cfg, l, d, ff),
+        }
+    elif cfg.family == "moe":
+        params["layers"] = {
+            "ln1": jnp.ones((l, d), jnp.float32),
+            "ln2": jnp.ones((l, d), jnp.float32),
+            **_init_attn(keys[2], cfg, l, d),
+            "router": jax.random.normal(
+                keys[4], (l, d, cfg.n_experts), jnp.float32
+            )
+            * 0.02,
+            **_init_ffn(keys[3], cfg, l, d, ff, lead=(cfg.n_experts,)),
+        }
+    elif cfg.family == "ssm":
+        params["layers"] = {
+            "ln1": jnp.ones((l, d), jnp.float32),
+            **_init_ssm(keys[2], cfg, l),
+        }
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        assert l % every == 0, (l, every)
+        params["layers"] = {
+            "ln1": jnp.ones((l, d), jnp.float32),
+            **_init_ssm(keys[2], cfg, l),
+        }
+        shared_attn = _init_attn(keys[3], cfg, 1, d)
+        params["shared"] = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "ln2": jnp.ones((d,), jnp.float32),
+            **{k: v[0] for k, v in shared_attn.items()},
+            **jax.tree.map(lambda v: v[0], _init_ffn(keys[5], cfg, 1, d, ff)),
+        }
+    elif cfg.family == "encdec":
+        params["layers"] = {  # decoder
+            "ln1": jnp.ones((l, d), jnp.float32),
+            "ln_x": jnp.ones((l, d), jnp.float32),
+            "ln2": jnp.ones((l, d), jnp.float32),
+            **_init_attn(keys[2], cfg, l, d),
+            **{
+                f"x_{k}": v
+                for k, v in _init_attn(keys[4], cfg, l, d).items()
+            },
+            **_init_ffn(keys[3], cfg, l, d, ff),
+        }
+        le = cfg.n_enc_layers
+        params["enc_layers"] = {
+            "ln1": jnp.ones((le, d), jnp.float32),
+            "ln2": jnp.ones((le, d), jnp.float32),
+            **_init_attn(keys[5], cfg, le, d),
+            **_init_ffn(keys[6], cfg, le, d, ff),
+        }
+        params["enc_final_norm"] = jnp.ones((d,), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0)
+    )
+
+
+# --------------------------------------------------------------------------
+# Layer bodies
+# --------------------------------------------------------------------------
+
+
+# Optional batch-resharding constraint for the attention region. When the
+# head count doesn't divide the TP degree, GSPMD falls back to running
+# attention REPLICATED across the model axis (16x redundant compute and
+# HBM traffic — measured on smollm, EXPERIMENTS.md §Perf iteration 5).
+# Setting a spec like P(('data','model')) reshards q/k/v batch-wise over
+# the whole mesh for the attention math instead.
+_ATTN_BATCH_SHARD = {"spec": None}
+# Sequence-sharded prefill attention (§Perf iteration 8): used when the
+# batch can't be resharded (prefill batch 32 on 256+ devices).
+_ATTN_SEQ_SHARD = {"mesh": None, "axis": "model", "batch_axes": ("pod", "data")}
+
+
+def set_attn_batch_sharding(spec) -> None:
+    """PartitionSpec for the attention batch dim, or None to disable."""
+    _ATTN_BATCH_SHARD["spec"] = spec
+
+
+def set_attn_seq_sharding(mesh, axis: str = "model",
+                          batch_axes=("pod", "data")) -> None:
+    """Enable (mesh != None) / disable sequence-sharded prefill attention."""
+    _ATTN_SEQ_SHARD.update(mesh=mesh, axis=axis, batch_axes=batch_axes)
+
+
+def _attn_shard(t):
+    spec = _ATTN_BATCH_SHARD["spec"]
+    if spec is None:
+        return t
+    return jax.lax.with_sharding_constraint(t, spec)
+
+
+def _attn_block(lp, cfg: ModelConfig, x, positions, *, causal=True, window=0):
+    """Full-sequence attention sub-block (pre-norm residual)."""
+    b, s, d = x.shape
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = dense(h, lp["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = dense(h, lp["wk"]).reshape(b, s, cfg.n_kv, cfg.hd)
+    v = dense(h, lp["wv"]).reshape(b, s, cfg.n_kv, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    seq_mesh = _ATTN_SEQ_SHARD["mesh"]
+    if (
+        seq_mesh is not None
+        and s % seq_mesh.shape[_ATTN_SEQ_SHARD["axis"]] == 0
+    ):
+        o = attn.flash_attention_seq_sharded(
+            q, k, v, causal=causal, window=window,
+            mesh=seq_mesh, axis=_ATTN_SEQ_SHARD["axis"],
+            batch_axes=_ATTN_SEQ_SHARD["batch_axes"],
+        )
+    else:
+        q, k, v = _attn_shard(q), _attn_shard(k), _attn_shard(v)
+        o = attn.flash_attention(q, k, v, causal=causal, window=window)
+    return x + dense(o.reshape(b, s, -1), lp["wo"]), (k, v)
+
+
+def _ffn_block(lp, cfg: ModelConfig, x, ln_name="ln2"):
+    h = rms_norm(x, lp[ln_name], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_lib.moe_ffn(
+            h, lp["router"], lp["w1"], lp["w3"], lp["w2"], cfg
+        )
+        return x + y, aux
+    if cfg.w_bits in (1, 2):
+        y = packed_swiglu(h, lp["w1"], lp["w3"], lp["w2"], cfg.w_bits)
+    else:
+        y = swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+    return x + y, jnp.zeros((), jnp.float32)
+
+
+def _ssm_block(lp, cfg: ModelConfig, x, state=None, conv_bufs=None):
+    """Mamba2 block. Train path (state None) or decode path (state given)."""
+    b = x.shape[0]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    z = dense(h, lp["in_z"])
+    xi = dense(h, lp["in_x"])
+    bi = dense(h, lp["in_b"])
+    ci = dense(h, lp["in_c"])
+    dt = jax.nn.softplus(
+        dense(h, lp["in_dt"]).astype(jnp.float32) + lp["dt_bias"]
+    )
+    if state is None:
+        xi = ssm_lib.causal_conv(xi, lp["conv_x"])
+        bi = ssm_lib.causal_conv(bi, lp["conv_b"])
+        ci = ssm_lib.causal_conv(ci, lp["conv_c"])
+        s = x.shape[1]
+        xh = xi.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
+        y, new_state = ssm_lib.ssd_chunked(
+            xh, dt, lp["a_log"], bi, ci, lp["d_skip"], cfg.ssm_chunk
+        )
+        y = y.reshape(b, s, cfg.d_inner)
+        new_bufs = None
+    else:
+        cx, cb, cc = conv_bufs
+        xi1, cx = ssm_lib.conv_decode_step(cx, xi[:, 0], lp["conv_x"])
+        bi1, cb = ssm_lib.conv_decode_step(cb, bi[:, 0], lp["conv_b"])
+        ci1, cc = ssm_lib.conv_decode_step(cc, ci[:, 0], lp["conv_c"])
+        xh = xi1.reshape(b, cfg.ssm_heads, cfg.ssm_head_dim)
+        y1, new_state = ssm_lib.ssd_decode_step(
+            state, xh, dt[:, 0], lp["a_log"], bi1, ci1, lp["d_skip"]
+        )
+        y = y1.reshape(b, 1, cfg.d_inner)
+        new_bufs = (cx, cb, cc)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 lp["gate_norm"], cfg.norm_eps)
+    return x + dense(y, lp["out"]), new_state, new_bufs
+
+
+# --------------------------------------------------------------------------
+# Forward (train / prefill, full sequence)
+# --------------------------------------------------------------------------
+
+
+def trunk(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    *,
+    prefix_embeds: jnp.ndarray | None = None,
+    remat: str = "none",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """All layers + final norm, *without* the unembedding.
+
+    Returns (hidden states over the token positions (B, S, d), aux loss).
+    ``prefix_embeds`` (B, P, d) are pre-computed modality embeddings (vlm
+    patches) prepended to the token embeddings.
+    """
+    x = embed(tokens, params["embed"], _dt(cfg))
+    n_prefix = 0
+    if prefix_embeds is not None:
+        n_prefix = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, d = x.shape
+    positions = jnp.arange(s)[None, :]
+
+    layer_fn = _make_layer_fn(cfg, positions)
+    if remat == "full":
+        layer_fn = jax.checkpoint(layer_fn)
+    elif remat == "dots":
+        layer_fn = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+
+    if cfg.family == "hybrid":
+        x, aux = _hybrid_stack(params, cfg, x, positions, layer_fn)
+    else:
+        (x, aux), _ = jax.lax.scan(
+            lambda carry, lp: (layer_fn(carry, lp), None),
+            (x, jnp.zeros((), jnp.float32)),
+            params["layers"],
+        )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x[:, n_prefix:], aux
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    *,
+    prefix_embeds: jnp.ndarray | None = None,
+    remat: str = "none",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. tokens: (B, S) int32. Returns (logits, aux)."""
+    x, aux = trunk(
+        params, cfg, tokens, prefix_embeds=prefix_embeds, remat=remat
+    )
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x, table, cfg.vocab), aux
+
+
+def _make_layer_fn(cfg: ModelConfig, positions):
+    def layer_fn(carry, lp):
+        x, aux = carry
+        if cfg.family in ("dense", "vlm", "moe"):
+            x, _ = _attn_block(
+                lp, cfg, x, positions, causal=True, window=cfg.sliding_window
+            )
+            x, a = _ffn_block(lp, cfg, x)
+            return (x, aux + a)
+        if cfg.family in ("ssm", "hybrid"):
+            x, _, _ = _ssm_block(lp, cfg, x)
+            return (x, aux)
+        raise ValueError(cfg.family)
+
+    return layer_fn
+
+
+def _hybrid_stack(params, cfg: ModelConfig, x, positions, layer_fn):
+    """Zamba2: scan over super-blocks of ``every`` ssm layers + one
+    application of the single shared attention/FFN block."""
+    every = cfg.hybrid_attn_every
+    n_super = cfg.n_layers // every
+    shaped = jax.tree.map(
+        lambda v: v.reshape((n_super, every) + v.shape[1:]), params["layers"]
+    )
+    shared = params["shared"]
+
+    def super_block(carry, lps):
+        def inner(c, lp):
+            return layer_fn(c, lp), None
+
+        carry, _ = jax.lax.scan(inner, carry, lps)
+        x, aux = carry
+        x, _ = _attn_block(shared, cfg, x, positions, causal=True)
+        x, a = _ffn_block(shared, cfg, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        super_block, (x, jnp.zeros((), jnp.float32)), shaped
+    )
+    return x, aux
+
+
+def loss_fn(
+    params, cfg: ModelConfig, tokens, labels, *, prefix_embeds=None,
+    remat: str = "none", aux_weight: float = 0.01, ce_chunk: int = 0,
+):
+    """Training loss. ``ce_chunk > 0`` switches to the fused chunked
+    unembed+CE (never materialises (B, S, V) logits — required for the
+    128k-vocab train cells, EXPERIMENTS.md §Perf)."""
+    from repro.models.layers import chunked_softmax_xent
+
+    table_of = lambda: (
+        params["embed"] if cfg.tie_embeddings else params["unembed"]
+    )
+    if ce_chunk:
+        x, aux = trunk(
+            params, cfg, tokens, prefix_embeds=prefix_embeds, remat=remat
+        )
+        ce = chunked_softmax_xent(
+            x, table_of(), labels, cfg.vocab, chunk=ce_chunk
+        )
+    else:
+        lg, aux = forward(
+            params, cfg, tokens, prefix_embeds=prefix_embeds, remat=remat
+        )
+        ce = cross_entropy(lg, labels, cfg.vocab)
+    return ce + aux_weight * aux, (ce, aux)
+
+
+# --------------------------------------------------------------------------
+# Decode: cache init, prefill, single-token step
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Decode-state pytree. Attention caches are (L, B, W, Hkv, D) with W =
+    min(max_len, sliding_window); ssm state is (L, B, H, P, N)."""
+    dt = _dt(cfg)
+    cache: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv_shape = (cfg.n_layers, batch, w, cfg.n_kv, cfg.hd)
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        cache["k"] = jnp.zeros(kv_shape, dt)
+        cache["v"] = jnp.zeros(kv_shape, dt)
+    if cfg.family in ("ssm", "hybrid"):
+        l = cfg.n_layers
+        cache["ssm"] = jnp.zeros(
+            (l, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        )
+        k = cfg.conv_kernel
+        cache["conv_x"] = jnp.zeros((l, batch, k - 1, cfg.d_inner), dt)
+        cache["conv_b"] = jnp.zeros((l, batch, k - 1, cfg.ssm_state), dt)
+        cache["conv_c"] = jnp.zeros((l, batch, k - 1, cfg.ssm_state), dt)
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.hybrid_attn_every
+        cache["k"] = jnp.zeros(
+            (n_super, batch, max_len, cfg.n_kv, cfg.hd), dt
+        )
+        cache["v"] = jnp.zeros(
+            (n_super, batch, max_len, cfg.n_kv, cfg.hd), dt
+        )
+    return cache
+
+
+# Decode-path split-d attention (EXPERIMENTS.md §Perf iteration 7): when
+# KV heads don't divide TP, GSPMD re-shards the whole cache every step;
+# the shard_map path in ``attention.decode_attention_split_d`` keeps the
+# cache resident in its head_dim-sharded layout instead.
+_DECODE_SPLIT_D = {"mesh": None, "axis": "model", "batch_axes": ("data",)}
+
+
+def set_decode_split_d(mesh, axis: str = "model",
+                       batch_axes=("pod", "data")) -> None:
+    """Enable (mesh != None) / disable the split-d decode attention."""
+    _DECODE_SPLIT_D.update(mesh=mesh, axis=axis, batch_axes=batch_axes)
+
+
+def _decode_attn_block(lp, cfg, x, k_cache, v_cache, pos, *, window=0):
+    """One-token attention against one layer's cache; returns new k/v row."""
+    b = x.shape[0]
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = dense(h, lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+    k = dense(h, lp["wk"]).reshape(b, 1, cfg.n_kv, cfg.hd)
+    v = dense(h, lp["wv"]).reshape(b, 1, cfg.n_kv, cfg.hd)
+    pos_b = jnp.broadcast_to(pos[None, None], (b, 1))
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k = apply_rope(k, pos_b, cfg.rope_theta)
+    w = k_cache.shape[1]
+    slot = pos % w if window else jnp.minimum(pos, w - 1)
+    k_cache = attn.cache_insert(k_cache, k, slot)
+    v_cache = attn.cache_insert(v_cache, v, slot)
+    if _DECODE_SPLIT_D["mesh"] is not None:
+        o = attn.decode_attention_split_d(
+            q, k_cache, v_cache, jnp.minimum(pos + 1, w), window=window,
+            mesh=_DECODE_SPLIT_D["mesh"], axis=_DECODE_SPLIT_D["axis"],
+            batch_axes=_DECODE_SPLIT_D["batch_axes"],
+        )
+    else:
+        o = attn.decode_attention(
+            q, k_cache, v_cache, jnp.minimum(pos + 1, w), window=window
+        )
+    return x + dense(o.reshape(b, 1, -1), lp["wo"]), k_cache, v_cache
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, token: jnp.ndarray, cache: dict
+) -> tuple[jnp.ndarray, dict]:
+    """One serving step: token (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = embed(token, params["embed"], _dt(cfg))
+    pos = cache["len"]
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def layer_fn(carry, lp_kv):
+            x, aux = carry
+            lp, kc, vc = lp_kv
+            x, kc, vc = _decode_attn_block(
+                lp, cfg, x, kc, vc, pos, window=cfg.sliding_window
+            )
+            x, a = _ffn_block(lp, cfg, x)
+            return (x, aux + a), (kc, vc)
+
+        (x, _), (ks, vs) = jax.lax.scan(
+            layer_fn,
+            (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], cache["k"], cache["v"]),
+        )
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def layer_fn(x, lp_state):
+            lp, st, cx, cb, cc = lp_state
+            x, st, bufs = _ssm_block(lp, cfg, x, state=st, conv_bufs=(cx, cb, cc))
+            return x, (st, *bufs)
+
+        x, (sts, cxs, cbs, ccs) = jax.lax.scan(
+            layer_fn,
+            x,
+            (
+                params["layers"],
+                cache["ssm"],
+                cache["conv_x"],
+                cache["conv_b"],
+                cache["conv_c"],
+            ),
+        )
+        new_cache.update(ssm=sts, conv_x=cxs, conv_b=cbs, conv_c=ccs)
+
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_super = cfg.n_layers // every
+        shaped = jax.tree.map(
+            lambda v: v.reshape((n_super, every) + v.shape[1:]),
+            params["layers"],
+        )
+        ssm_states = jax.tree.map(
+            lambda v: v.reshape((n_super, every) + v.shape[1:]),
+            (cache["ssm"], cache["conv_x"], cache["conv_b"], cache["conv_c"]),
+        )
+        shared = params["shared"]
+
+        def super_block(x, inp):
+            lps, (sts, cxs, cbs, ccs), kc, vc = inp
+
+            def inner(x, lp_state):
+                lp, st, cx, cb, cc = lp_state
+                x, st, bufs = _ssm_block(
+                    lp, cfg, x, state=st, conv_bufs=(cx, cb, cc)
+                )
+                return x, (st, *bufs)
+
+            x, new_states = jax.lax.scan(inner, x, (lps, sts, cxs, cbs, ccs))
+            x, kc, vc = _decode_attn_block(shared, cfg, x, kc, vc, pos)
+            x, _ = _ffn_block(shared, cfg, x)
+            return x, (new_states, kc, vc)
+
+        x, (new_states, ks, vs) = jax.lax.scan(
+            super_block, x, (shaped, ssm_states, cache["k"], cache["v"])
+        )
+        sts, cxs, cbs, ccs = new_states
+        merge = lambda v: v.reshape((cfg.n_layers,) + v.shape[2:])
+        new_cache.update(
+            ssm=merge(sts), conv_x=merge(cxs), conv_b=merge(cbs),
+            conv_c=merge(ccs), k=ks, v=vs,
+        )
+    else:
+        raise ValueError(f"decode not supported for family {cfg.family}")
+
+    new_cache["len"] = pos + 1
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x, table, cfg.vocab), new_cache
+
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    *,
+    prefix_embeds=None,
+) -> jnp.ndarray:
+    """Prefill = the full-sequence forward (cache materialisation is the
+    serving engine's job; the dry-run lowers the compute graph)."""
+    lg, _ = forward(params, cfg, tokens, prefix_embeds=prefix_embeds)
+    return lg

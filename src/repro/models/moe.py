@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with capacity-based batched dispatch.
+
+Expert-parallel design (DESIGN.md §5): expert weights are stacked on a
+leading E axis and sharded over the 'model' mesh axis. Dispatch is *batched
+over experts* — each expert top-k-selects its C highest-gate tokens
+(capacity C = tokens * top_k * capacity_factor / E), gathers them, runs the
+FFN as one batched einsum over (E, C, d), and scatter-adds the combined
+outputs. Everything is static-shaped (tokens beyond capacity drop, standard
+GShard-style), so it lowers cleanly under GSPMD at 512 devices.
+
+This is the architecture family where the paper's insight bites hardest:
+64 small (d_ff 1024/1408) expert FFNs are exactly the "many oddly-shaped
+parameter buffers" whose packed storage the FCMP planner optimizes
+(DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# Expert-parallel sharding hook (EXPERIMENTS.md §Perf iteration 6): pin
+# the dispatched (E, C, d) tensors to the expert axis so GSPMD never
+# "involuntarily" replicates the dispatch gather's transpose (a 5.4 GiB
+# f32 all-reduce per MoE layer on olmoe train_4k).
+_EP = {"axis": None}
+
+
+def set_moe_ep_axis(axis) -> None:
+    _EP["axis"] = axis
+
+
+def _ep_shard_bec(t):
+    """Pin a (B, E, ...) dispatch tensor: B on data, E on the EP axis."""
+    if _EP["axis"] is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+
+    spec = P("data", _EP["axis"], *([None] * (t.ndim - 2)))
+    return jax.lax.with_sharding_constraint(t, spec)
+
+
+def moe_capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    """Per-group expert capacity (groups = batch rows, GShard-style)."""
+    cap = int(
+        group_tokens
+        * cfg.experts_per_token
+        * cfg.capacity_factor
+        / cfg.n_experts
+    )
+    return min(group_tokens, max(1, (cap + 7) // 8 * 8 if cap >= 8 else cap or 1))
+
+
+def moe_ffn(
+    x: jnp.ndarray,
+    router: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    cfg: ModelConfig,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d); router: (d, E); w1/w3: (E, d, ff); w2: (E, ff, d).
+
+    GROUPED dispatch (§Perf iteration 6): each batch row is a dispatch
+    group with its own per-expert capacity C = S*k*cf/E, so token
+    gather/scatter never crosses the data axis (a global top-k needed a
+    5.4 GiB distributed gather per layer); the only inter-device traffic
+    is the (B, S, d) bf16 combine psum over the expert (model) axis.
+    Returns (output (B, S, d), aux load-balance loss scalar).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+
+    gate_logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), router
+    )
+    probs = jax.nn.softmax(gate_logits, axis=-1)  # (B, S, E)
+    top_g, top_i = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, axis=-1, keepdims=True), 1e-9)
+
+    # dense (B, S, E) gate matrix: zero where the expert is not in top-k
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)  # (B, S, k, E)
+    gate = jnp.einsum("bske,bsk->bse", onehot, top_g)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(onehot.sum(axis=2), axis=(0, 1))  # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    cap = moe_capacity(cfg, s)
+    # per group, each expert picks its C strongest tokens (static shapes;
+    # tokens beyond capacity drop — standard GShard behaviour)
+    g_bes = gate.transpose(0, 2, 1)  # (B, E, S)
+    sel_g, sel_i = jax.lax.top_k(g_bes, cap)  # (B, E, C)
+    sel_i = _ep_shard_bec(sel_i)
+
+    # row-local gather; activations stay in the compute dtype (bf16)
+    xe = jnp.take_along_axis(
+        x, sel_i.reshape(b, e * cap)[..., None], axis=1
+    ).reshape(b, e, cap, d)
+    xe = _ep_shard_bec(xe)
+    h = jax.nn.silu(
+        jnp.einsum("becd,edf->becf", xe, w1.astype(xe.dtype))
+    ) * jnp.einsum("becd,edf->becf", xe, w3.astype(xe.dtype))
+    ye = jnp.einsum("becf,efd->becd", h, w2.astype(h.dtype))  # (B, E, C, d)
+
+    gate_scale = ((sel_g > 0.0) * sel_g).astype(ye.dtype)
+    ye = _ep_shard_bec(ye * gate_scale[..., None])
+    # row-local combine scatter, vmapped over the batch so the lowered
+    # scatter carries explicit batching dims (GSPMD shards those; the
+    # hand-indexed form was replicated at the GLOBAL batch — an 8.6 GiB
+    # f32 all-reduce per layer). The cross-expert sum is the psum GSPMD
+    # inserts over the 'model' axis.
+    yf = jax.vmap(
+        lambda y_r, i_r: jnp.zeros((s, d), ye.dtype).at[i_r].add(y_r)
+    )(ye.reshape(b, e * cap, d), sel_i.reshape(b, e * cap))
+    if _EP["axis"] is not None:
+        from jax.sharding import PartitionSpec as P
+
+        yf = jax.lax.with_sharding_constraint(yf, P("data", None, None))
+    return yf, aux.astype(jnp.float32)

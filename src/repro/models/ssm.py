@@ -1,0 +1,155 @@
+"""Mamba2 / SSD (state-space duality) layer: chunked train scan + O(1) decode.
+
+The SSD recurrence  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,
+y_t = C_t h_t + D x_t  is evaluated in chunked ("quadratic-in-chunk") form
+(Dao & Gu 2024, arXiv:2405.21060 §6): within a chunk of length Q the output
+is an attention-like matmul with a decay mask; across chunks a short
+``lax.scan`` carries the (H, P, N) state. This keeps the lowering matmul-
+dominated (MXU-friendly) and the live activation window at Q x Q — the same
+structural trick as the flash-attention scan.
+
+Decode is the pure recurrence on a persistent state — O(1) per token, which
+is why the ssm/hybrid archs run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def segsum(log_decay: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum': L[i, j] = sum_{k=j+1..i} a_k for i >= j else -inf.
+
+    log_decay: (..., Q). Returns (..., Q, Q) lower-triangular log-decay mask.
+    """
+    q = log_decay.shape[-1]
+    cs = jnp.cumsum(log_decay, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a_log: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    d_skip: jnp.ndarray,
+    chunk: int,
+    h0: jnp.ndarray | None = None,
+):
+    """SSD forward.
+
+    x: (Bt, S, H, P) inputs; dt: (Bt, S, H) positive step sizes;
+    a_log: (H,) with A = -exp(a_log) < 0; b, c: (Bt, S, N) shared across
+    heads (ngroups=1); d_skip: (H,) skip gain.
+    Returns y: (Bt, S, H, P) and final state (Bt, H, P, N).
+    """
+    bt, s, h, p = x.shape
+    n = b.shape[-1]
+    if s % chunk != 0:  # largest divisor of s <= requested chunk
+        chunk = next(c for c in range(min(chunk, s), 0, -1) if s % c == 0)
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,)
+
+    xc = x.reshape(bt, nc, chunk, h, p)
+    dtc = dt.reshape(bt, nc, chunk, h).astype(jnp.float32)
+    bc = b.reshape(bt, nc, chunk, n)
+    cc = c.reshape(bt, nc, chunk, n)
+
+    dta = dtc * a  # (Bt, nc, Q, H) log-decay per step
+    # intra-chunk: Y_intra = ((C B^T) * decay_mask * dt) X
+    lmask = segsum(dta.transpose(0, 1, 3, 2))  # (Bt, nc, H, Q, Q)
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)  # (Bt, nc, Q, Q)
+    w = cb[:, :, None] * jnp.exp(lmask)  # (Bt, nc, H, Q, Q)
+    w = w * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # dt at source step
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", w.astype(x.dtype), xc)
+
+    # chunk-final states: S_c = sum_k exp(sum_{j>k} dta_j) dt_k B_k x_k
+    dta_cum = jnp.cumsum(dta, axis=2)
+    decay_to_end = jnp.exp(dta_cum[:, :, -1:, :] - dta_cum)  # (Bt,nc,Q,H)
+    sc = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn",
+        bc.astype(jnp.float32),
+        decay_to_end * dtc,
+        xc.astype(jnp.float32),
+    )  # (Bt, nc, H, P, N)
+    chunk_decay = jnp.exp(dta_cum[:, :, -1, :])  # (Bt, nc, H)
+
+    # inter-chunk recurrence over nc chunks
+    def step(hprev, inp):
+        s_c, dec = inp  # (Bt,H,P,N), (Bt,H)
+        hnew = hprev * dec[..., None, None] + s_c
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((bt, h, p, n), jnp.float32)
+    hfinal, hprevs = jax.lax.scan(
+        step,
+        h0,
+        (sc.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (Bt, nc, H, P, N)
+
+    # inter-chunk contribution: y_inter = C_t exp(cum decay) h_prev
+    in_decay = jnp.exp(dta_cum)  # decay from chunk start to t (inclusive)
+    y_inter = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", cc.astype(jnp.float32), in_decay, hprevs
+    )
+
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(bt, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), hfinal
+
+
+def ssd_decode_step(
+    h: jnp.ndarray,
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a_log: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    d_skip: jnp.ndarray,
+):
+    """One-token recurrence. h: (Bt, H, P, N); x: (Bt, H, P); dt: (Bt, H);
+    b, c: (Bt, N). Returns (y (Bt, H, P), h_new)."""
+    dt = dt.astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dec = jnp.exp(dt * a)[..., None, None]  # (Bt, H, 1, 1)
+    inc = (dt[..., None] * x.astype(jnp.float32))[..., None] * b[
+        :, None, None, :
+    ].astype(jnp.float32)
+    h_new = h * dec + inc
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * d_skip[None, :, None]
+    return y.astype(x.dtype), h_new
+
+
+def causal_conv(
+    x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray | None = None
+):
+    """Depthwise causal conv1d. x: (Bt, S, C); w: (K, C).
+
+    Train path pads left; decode path uses ``conv_decode_step``.
+    """
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windows: out[t] = sum_j x[t - K + 1 + j] * w[j]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for j in range(k):
+        out = out + xp[:, j : j + x.shape[1]].astype(jnp.float32) * w[j].astype(
+            jnp.float32
+        )
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def conv_decode_step(buf: jnp.ndarray, xt: jnp.ndarray, w: jnp.ndarray):
+    """buf: (Bt, K-1, C) trailing inputs; xt: (Bt, C). Returns (y, buf')."""
+    k = w.shape[0]
+    window = jnp.concatenate([buf, xt[:, None]], axis=1)  # (Bt, K, C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    return jax.nn.silu(y).astype(xt.dtype), window[:, 1:]

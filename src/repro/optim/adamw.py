@@ -1,0 +1,78 @@
+"""AdamW, written directly against the pytree API (no optax dependency).
+
+Moments are stored in f32 regardless of parameter dtype (mixed-precision
+training: bf16 params + f32 optimizer state, DESIGN.md §5); the state tree
+mirrors the parameter tree so the sharding policy applies verbatim, and the
+checkpoint layer serialises it like any other pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    mu: Any  # first moment, f32, same tree as params
+    nu: Any  # second moment, f32
+
+
+def _is_packed_leaf(path) -> bool:
+    """FCMP-packed carriers are inference-only: no gradient, no moments."""
+    return any(getattr(p, "key", None) == "packed" for p in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+    def init(self, params) -> OptState:
+        # mu and nu must be DISTINCT buffer trees (aliased trees break
+        # donation: "attempt to donate the same buffer twice").
+        mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), mu, nu)
+
+    def schedule(self, step) -> jnp.ndarray:
+        warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
+        return self.lr * warm
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state)."""
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        clip = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self.schedule(step)
+        bc1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * clip
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * g * g
+            mh, vh = m / bc1, v / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(step, new_mu, new_nu)

@@ -1,0 +1,70 @@
+"""Distributed-optimization tricks: gradient compression.
+
+Two schemes, both standard at 1000+-node scale and both in the spirit of
+the paper (spend surplus compute/precision headroom to relieve the
+bottleneck resource — there OCM, here cross-pod bandwidth):
+
+* **top-k sparsification with error feedback**: only the k largest-magnitude
+  gradient entries cross the slow (inter-pod DCN) links; the residual is
+  carried in a local error-feedback buffer so the compression is unbiased
+  over time (Stich et al.).
+* **int8 quantized all-reduce**: per-tensor symmetric int8 with an f32
+  scale, 4x fewer bytes on the wire for the intra-pod all-reduce.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_topk(g: jnp.ndarray, k: int):
+    """Flatten and keep the k largest-|.| entries: (values, indices)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def decompress_topk(values, idx, shape):
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    return flat.at[idx].set(values).reshape(shape)
+
+
+def topk_error_feedback_update(g, err, k: int):
+    """One error-feedback step: returns (sparse (values, idx), new_err).
+
+    The transmitted gradient is ``sparsify(g + err)``; the untransmitted
+    remainder becomes the next error buffer.
+    """
+    corrected = g.astype(jnp.float32) + err
+    values, idx = compress_topk(corrected, k)
+    transmitted = decompress_topk(values, idx, g.shape)
+    new_err = corrected - transmitted
+    return (values, idx), transmitted, new_err
+
+
+def int8_quantize(g: jnp.ndarray):
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def int8_allreduce(g: jnp.ndarray, axis_name: str):
+    """Quantize-then-psum inside shard_map: ~4x wire-byte reduction.
+
+    All participants must agree on ONE scale before quantizing (summing
+    codes quantized at different scales is not meaningful), so the scale
+    itself is a scalar pmax — 4 bytes of extra traffic. Accumulation
+    happens in int32 (psum of int8 codes upcast), exact w.r.t. the codes.
+    """
+    gmax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+    scale = jnp.maximum(gmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    return total.astype(jnp.float32) * scale / n

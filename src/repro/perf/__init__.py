@@ -1,0 +1,4 @@
+"""Performance analysis: loop-aware HLO cost walk + roofline terms."""
+
+from repro.perf.hlo_analysis import HloCost, analyze  # noqa: F401
+from repro.perf.roofline import HW, RooflineReport, model_flops, roofline  # noqa: F401

@@ -1,0 +1,127 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+    memory term     = HLO_bytes / HBM_bw                 (per chip)
+    collective term = collective_bytes / link_bw         (per chip)
+
+``compiled.cost_analysis()`` is evaluated on the SPMD-partitioned module,
+so its FLOPs/bytes are already *per device*; the collective bytes are
+parsed from the post-partitioning HLO text by summing operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (also per device). Hardware constants are
+TPU v5e (the adaptation target).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HwModel:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12  # bf16 per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link
+
+
+HW = HwModel()
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    name: str
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device HLO bytes accessed
+    coll_bytes: float  # per-device collective operand bytes
+    coll_breakdown: dict
+    model_flops: float  # 6*N*D (dense) / 6*N_active*D (MoE), total
+    n_devices: int
+    hw: HwModel = HW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.hw.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap model: step >= max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO flops (remat/redundancy waste)."""
+        total_hlo = self.flops * self.n_devices
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the peak-bound step time."""
+        useful_t = (self.model_flops / self.n_devices) / self.hw.peak_flops
+        return useful_t / self.step_time if self.step_time else 0.0
+
+    def row(self) -> str:
+        return (
+            f"{self.name:34s} {self.t_compute*1e3:9.2f} "
+            f"{self.t_memory*1e3:9.2f} {self.t_collective*1e3:9.2f} "
+            f"{self.bottleneck:10s} {self.useful_flops_ratio:6.2f} "
+            f"{self.roofline_fraction*100:6.1f}%"
+        )
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D for training; 2*N*D for single forward (prefill); 2*N_active*B
+    per decoded token."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def roofline(
+    name: str,
+    compiled,
+    cfg,
+    shape,
+    n_devices: int,
+    hw: HwModel = HW,
+) -> RooflineReport:
+    """Loop-aware roofline from the compiled SPMD artifact.
+
+    Uses ``perf.hlo_analysis`` rather than ``compiled.cost_analysis()``:
+    XLA's cost analysis visits each instruction once, so a lax.scan over L
+    layers under-counts FLOPs/bytes/collectives by ~L (13x measured on
+    smollm train_4k). The loop-aware walk multiplies by known trip counts.
+    """
+    from repro.perf.hlo_analysis import analyze
+
+    cost = analyze(compiled.as_text())
+    return RooflineReport(
+        name=name,
+        flops=cost.dot_flops,
+        hbm_bytes=cost.traffic_bytes,
+        coll_bytes=cost.total_collective_bytes,
+        coll_breakdown=dict(cost.collective_bytes),
+        model_flops=model_flops(cfg, shape),
+        n_devices=n_devices,
+        hw=hw,
+    )

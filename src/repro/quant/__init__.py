@@ -1,0 +1,16 @@
+"""Quantization-aware-training substrate (the Brevitas analogue, §III-A)."""
+
+from repro.quant.quantizers import (  # noqa: F401
+    binary_weight,
+    int_act,
+    int_weight,
+    lsq_quantize,
+    pack_bits,
+    ternary_weight,
+    unpack_bits,
+)
+from repro.quant.streamline import (  # noqa: F401
+    ThresholdSpec,
+    bn_act_to_thresholds,
+    thresholding,
+)

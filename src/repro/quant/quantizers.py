@@ -1,0 +1,170 @@
+"""Quantizers: binary / ternary / int-N weights, LSQ learned-scale acts.
+
+Matches the paper's §III-A training configuration:
+  * ResBlock conv weights: 1-bit (binary, sign * scale) or 2-bit (ternary),
+  * first/last layer weights: signed 8-bit,
+  * activations: signed 2-bit everywhere, 4-bit around the residual adds,
+  * scale factors learned with LSQ (Esser et al. [24] / Jain et al. [25]).
+
+All quantizers are differentiable via straight-through estimators; LSQ uses
+the exact Esser et al. gradient through a ``custom_vjp``. Bit-packing
+helpers convert quantized weights to the dense int8 carrier format consumed
+by the Pallas ``packed_matmul`` kernel (the TPU OCM-packing analogue).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ste(x, q):
+    """Straight-through: forward q, backward identity."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# --------------------------------------------------------------------------
+# LSQ (learned step size quantization)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_quantize(x, scale, qn: int, qp: int):
+    """LSQ: q = clip(round(x/s), -qn, qp) * s with the Esser et al. VJP."""
+    s = jnp.maximum(scale, 1e-8)
+    return jnp.clip(jnp.round(x / s), -qn, qp) * s
+
+
+def _lsq_fwd(x, scale, qn, qp):
+    s = jnp.maximum(scale, 1e-8)
+    v = x / s
+    q = jnp.clip(jnp.round(v), -qn, qp)
+    return q * s, (v, q, s)
+
+
+def _lsq_bwd(qn, qp, res, g):
+    v, q, s = res
+    inside = (v >= -qn) & (v <= qp)
+    dx = jnp.where(inside, g, 0.0)
+    # d(q*s)/ds: inside -> round(v) - v ; clipped -> -qn or qp
+    ds_elem = jnp.where(inside, q - v, q)
+    # LSQ grad-scale normalisation: 1/sqrt(n * qp)
+    gscale = 1.0 / np.sqrt(max(1, v.size) * max(1, qp))
+    ds = jnp.sum(g * ds_elem) * gscale
+    return dx, jnp.asarray(ds, dtype=s.dtype).reshape(())
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def int_act(x, scale, bits: int, signed: bool = True):
+    """LSQ-quantized activation (2-bit / 4-bit in the paper)."""
+    if signed:
+        qn, qp = 2 ** (bits - 1), 2 ** (bits - 1) - 1
+    else:
+        qn, qp = 0, 2**bits - 1
+    return lsq_quantize(x, scale, qn, qp)
+
+
+def init_act_scale(bits: int = 2) -> jnp.ndarray:
+    # LSQ init ~ 2<|x|>/sqrt(qp); a constant works for synthetic training
+    return jnp.asarray(2.0 / np.sqrt(2 ** (bits - 1) - 0.5), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Weight quantizers (STE)
+# --------------------------------------------------------------------------
+
+
+def binary_weight(w):
+    """1-bit: sign(w) * E|w| per output channel (last axis = out)."""
+    axes = tuple(range(w.ndim - 1))
+    alpha = jnp.mean(jnp.abs(w), axis=axes, keepdims=True)
+    q = jnp.where(w >= 0, 1.0, -1.0) * alpha
+    return _ste(w, q)
+
+
+def ternary_weight(w, delta_frac: float = 0.7):
+    """2-bit ternary (Li et al. [17]): t = 0.7*E|w|, levels {-a, 0, +a}."""
+    axes = tuple(range(w.ndim - 1))
+    mean_abs = jnp.mean(jnp.abs(w), axis=axes, keepdims=True)
+    delta = delta_frac * mean_abs
+    mask = (jnp.abs(w) > delta).astype(w.dtype)
+    alpha_num = jnp.sum(jnp.abs(w) * mask, axis=axes, keepdims=True)
+    alpha = alpha_num / jnp.maximum(jnp.sum(mask, axis=axes, keepdims=True), 1.0)
+    q = jnp.sign(w) * mask * alpha
+    return _ste(w, q)
+
+
+def int_weight(w, bits: int = 8):
+    """Symmetric signed int-N weight quant (first/last layers, 8-bit)."""
+    qp = 2 ** (bits - 1) - 1
+    axes = tuple(range(w.ndim - 1))
+    s = jnp.max(jnp.abs(w), axis=axes, keepdims=True) / qp
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(w / s), -qp - 1, qp) * s
+    return _ste(w, q)
+
+
+def quantize_weight(w, w_bits: int):
+    if w_bits == 1:
+        return binary_weight(w)
+    if w_bits == 2:
+        return ternary_weight(w)
+    return int_weight(w, w_bits)
+
+
+# --------------------------------------------------------------------------
+# Bit packing (carrier format for kernels/packed_matmul)
+# --------------------------------------------------------------------------
+
+
+def pack_bits(q_codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack integer codes in [0, 2^bits) along axis 0 into a uint8 carrier.
+
+    For bits=1: 8 weights/byte; bits=2: 4 weights/byte; bits=4: 2/byte.
+    Axis 0 (the reduction dim) must be a multiple of 8//bits.
+    """
+    assert bits in (1, 2, 4)
+    per = 8 // bits
+    k = q_codes.shape[0]
+    assert k % per == 0, f"reduction dim {k} not a multiple of {per}"
+    q = q_codes.astype(jnp.uint8).reshape((k // per, per) + q_codes.shape[1:])
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).reshape(
+        (1, per) + (1,) * (q_codes.ndim - 1)
+    )
+    return jnp.sum(q << shifts, axis=1).astype(jnp.uint8)
+
+
+def unpack_bits(packed: jnp.ndarray, bits: int, k: int) -> jnp.ndarray:
+    """Inverse of ``pack_bits``: uint8 carrier -> integer codes, axis 0."""
+    assert bits in (1, 2, 4)
+    per = 8 // bits
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).reshape(
+        (1, per) + (1,) * (packed.ndim - 1)
+    )
+    mask = jnp.uint8(2**bits - 1)
+    codes = (packed[:, None] >> shifts) & mask
+    out = codes.reshape((packed.shape[0] * per,) + packed.shape[1:])
+    return out[:k]
+
+
+def codes_from_binary(w_sign: jnp.ndarray) -> jnp.ndarray:
+    """{-1,+1} -> {0,1} codes."""
+    return (w_sign > 0).astype(jnp.uint8)
+
+
+def binary_from_codes(codes: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * 2.0 - 1.0
+
+
+def codes_from_ternary(w_tern: jnp.ndarray) -> jnp.ndarray:
+    """{-1,0,+1} -> {0,1,2} codes (2-bit)."""
+    return (w_tern + 1).astype(jnp.uint8)
+
+
+def ternary_from_codes(codes: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) - 1.0

@@ -1,0 +1,91 @@
+"""FINN streamlining: fold BatchNorm + quantized activation into integer
+thresholding (paper §III-B).
+
+A streamlined MVAU computes ``o = sum_k [acc >= T_k]`` on the raw integer
+accumulator instead of ``quant_act(BN(acc))`` — bit-exact, and the T_k are
+what the FCMP weight/threshold memories actually store.
+
+Derivation: the A-bit activation maps z to level l when z crosses the l-th
+activation-domain threshold t_l = s * (l - 2^(A-1) + 0.5) (mid-rise, signed).
+With z = gamma * (acc - mu) / sigma + beta, the accumulator-domain
+threshold is
+
+    T_l = (t_l - beta) * sigma / gamma + mu          (gamma > 0)
+
+and the comparison flips for gamma < 0, which we normalise by negating both
+accumulator and thresholds (FINN does the same sign-canonicalisation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ThresholdSpec:
+    """Per-channel thresholds: shape (channels, n_levels-1), ascending."""
+
+    thresholds: jnp.ndarray
+    signs: jnp.ndarray  # +1/-1 per channel (gamma sign canonicalisation)
+    offset: float  # output integer offset (signed representation)
+    scale: jnp.ndarray  # activation scale s (to map level -> value)
+
+
+def act_level_thresholds(scale, bits: int, signed: bool = True):
+    """Activation-domain decision boundaries of an LSQ-style quantizer."""
+    if signed:
+        levels = jnp.arange(-(2 ** (bits - 1)) + 1, 2 ** (bits - 1))
+        offset = -(2 ** (bits - 1))
+    else:
+        levels = jnp.arange(1, 2**bits)
+        offset = 0
+    # round-to-nearest: boundary between l-1 and l sits at (l - 0.5) * s
+    return (levels - 0.5) * scale, float(offset)
+
+
+def bn_act_to_thresholds(
+    gamma, beta, mu, var, act_scale, bits: int, eps: float = 1e-5
+) -> ThresholdSpec:
+    """Fold BN(gamma,beta,mu,var) + quant-act(scale,bits) into thresholds."""
+    gamma = jnp.asarray(gamma)
+    sigma = jnp.sqrt(jnp.asarray(var) + eps)
+    t_act, offset = act_level_thresholds(jnp.asarray(act_scale), bits)
+    # broadcast: (C, L)
+    t_act = jnp.broadcast_to(t_act, (gamma.shape[0], t_act.shape[-1]))
+    safe_gamma = jnp.where(jnp.abs(gamma) < 1e-12, 1e-12, gamma)
+    T = (t_act - beta[:, None]) * (sigma / safe_gamma)[:, None] + mu[:, None]
+    signs = jnp.where(gamma >= 0, 1.0, -1.0)
+    # canonicalise: for gamma<0 comparisons flip; store ascending thresholds
+    T = jnp.where(signs[:, None] > 0, T, -T)
+    T = jnp.sort(T, axis=1)
+    return ThresholdSpec(T, signs, offset, jnp.asarray(act_scale))
+
+
+def thresholding(acc, spec: ThresholdSpec):
+    """Integer thresholding: o = offset + sum_k [sign*acc >= T_k].
+
+    ``acc``: (..., C) raw accumulator. Returns the quantized activation
+    *value* (level * scale) so it is drop-in for BN+act in the float graph.
+    """
+    x = acc * spec.signs
+    level = jnp.sum(
+        (x[..., None] >= spec.thresholds).astype(jnp.int32), axis=-1
+    ) + int(spec.offset)
+    return level.astype(acc.dtype) * spec.scale
+
+
+def thresholding_int(acc, spec: ThresholdSpec):
+    """Integer-only output (what the FPGA datapath carries)."""
+    x = acc * spec.signs
+    return jnp.sum(
+        (x[..., None] >= spec.thresholds).astype(jnp.int32), axis=-1
+    ) + int(spec.offset)
+
+
+def reference_bn_act(acc, gamma, beta, mu, var, act_scale, bits, eps=1e-5):
+    """The unstreamlined graph: BN then round-to-nearest signed quant."""
+    z = gamma * (acc - mu) / jnp.sqrt(var + eps) + beta
+    qn, qp = 2 ** (bits - 1), 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(z / act_scale), -qn, qp) * act_scale

@@ -1,0 +1,99 @@
+"""Step builders: one jittable train / prefill / serve step per config.
+
+These close over the ``ModelConfig`` and optimizer so the same callable
+serves the smoke tests (1 CPU device), the end-to-end examples, and the
+512-device dry-run (where it is lowered with sharded ShapeDtypeStructs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_lib
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW
+
+
+def _split_batch(cfg: ModelConfig, batch: dict):
+    kwargs = {}
+    if cfg.family == "vlm":
+        kwargs["prefix_embeds"] = batch["prefix_embeds"]
+    return batch["tokens"], batch["labels"], kwargs
+
+
+def make_loss_fn(
+    cfg: ModelConfig, *, remat: str = "full", ce_chunk: int = 0
+) -> Callable:
+    def loss(params, batch):
+        if cfg.family == "encdec":
+            l, _ = encdec_lib.loss_fn(
+                params, cfg, batch["tokens"], batch["labels"], batch["frames"]
+            )
+            return l
+        tokens, labels, kw = _split_batch(cfg, batch)
+        l, _ = lm.loss_fn(
+            params, cfg, tokens, labels,
+            remat=remat, ce_chunk=ce_chunk, **kw,
+        )
+        return l
+
+    return loss
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: AdamW | None = None,
+    *,
+    remat: str = "full",
+    ce_chunk: int = 0,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    opt = opt or AdamW()
+    loss = make_loss_fn(cfg, remat=remat, ce_chunk=ce_chunk)
+
+    def step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(loss)(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, {"loss": l}
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """(params, batch) -> next-token logits (B, 1, V).
+
+    Slices the hidden states *before* the unembedding so the full (B, S, V)
+    logits tensor is never built — at 32k x 128k-vocab that tensor is the
+    whole HBM budget (EXPERIMENTS.md §Perf).
+    """
+
+    from repro.models.layers import logits as unembed_logits
+
+    def step(params, batch):
+        if cfg.family == "encdec":
+            x, _ = encdec_lib.trunk(
+                params, cfg, batch["tokens"], batch["frames"]
+            )
+        else:
+            tokens, _, kw = _split_batch(cfg, batch)
+            x, _ = lm.trunk(params, cfg, tokens, **kw)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        return unembed_logits(x[:, -1:, :], table, cfg.vocab)
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, token, cache) -> (logits (B, 1, V), new cache)."""
+
+    def step(params, token, cache):
+        if cfg.family == "encdec":
+            return encdec_lib.decode_step(params, cfg, token, cache)
+        return lm.decode_step(params, cfg, token, cache)
+
+    return step

@@ -1,0 +1,94 @@
+"""Sharding-policy invariants: every assigned arch gets a legal spec for
+every parameter leaf / batch / cache (divisibility fallbacks must never
+produce an unshardable spec), and big leaves actually get sharded."""
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.config import SHAPES, shape_applicable
+
+# spec construction must not require real devices: build a fake "mesh"
+# exposing only what the policy reads (axis_names + shape).
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+    size = 256
+
+
+class FakeMeshMP:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+    size = 512
+
+
+import jax
+
+from repro.dist import sharding as shd
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [FakeMesh(), FakeMeshMP()], ids=["1pod", "2pod"])
+def test_param_specs_legal_and_effective(arch, mesh):
+    cfg = get_config(arch)
+    specs = shd.param_specs(cfg, mesh)
+    abstract = lm.abstract_params(cfg)
+    flat_s = jax.tree_util.tree_flatten_with_path(specs)[0]
+    flat_a = {tuple(str(k) for k in p): l
+              for p, l in jax.tree_util.tree_flatten_with_path(abstract)[0]}
+    n_sharded_bytes = 0
+    n_total_bytes = 0
+    for path, spec in flat_s:
+        leaf = flat_a[tuple(str(k) for k in path)]
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        n_total_bytes += nbytes
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else tuple(axes)
+            div = int(np.prod([mesh.shape[a] for a in axes]))
+            # legality: the sharded dim must divide
+            assert leaf.shape[dim] % div == 0, (path, leaf.shape, spec)
+            n_sharded_bytes += nbytes
+            break
+    # effectiveness: most parameter bytes are TP-sharded for every arch
+    assert n_sharded_bytes / n_total_bytes > 0.85, (
+        arch, n_sharded_bytes / n_total_bytes,
+    )
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_and_cache_specs_legal(arch):
+    cfg = get_config(arch)
+    mesh = FakeMesh()
+    for shape in SHAPES.values():
+        ok, _ = shape_applicable(cfg, shape)
+        if not ok:
+            continue
+        bspecs = shd.batch_specs(cfg, mesh, shape.global_batch)
+        for name, spec in bspecs.items():
+            if spec and spec[0] is not None:
+                axes = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+                div = int(np.prod([mesh.shape[a] for a in axes]))
+                assert shape.global_batch % div == 0, (arch, shape.name, name)
+        if shape.kind == "decode":
+            cspecs = shd.cache_specs(
+                cfg, mesh, shape.global_batch, shape.seq_len
+            )
+            assert "len" in cspecs
+            # every family provides specs for every cache leaf it creates
+            cache = jax.eval_shape(
+                lambda: lm.init_cache(cfg, shape.global_batch, 64)
+            )
+            for k in cache:
+                assert k in cspecs, (arch, k)
+
+
+def test_vocab_padding_always_divides():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 16 == 0
+        assert cfg.padded_vocab >= cfg.vocab
