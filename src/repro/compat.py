@@ -1,0 +1,65 @@
+"""Version-tolerant shims over moving jax APIs.
+
+The repo targets the Pallas/TPU toolchain across several jax releases, and
+two API points have drifted underneath it:
+
+* ``shard_map`` graduated from ``jax.experimental.shard_map.shard_map`` to
+  ``jax.shard_map``, and its replication-check keyword was renamed
+  ``check_rep`` -> ``check_vma``.
+* the Pallas TPU compiler-parameter dataclass was renamed
+  ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``.
+
+Every call site in the repo goes through this module so a jax upgrade (or
+downgrade inside the container image) is a one-file concern.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+
+def _kwarg_name(fn, default: str) -> str:
+    """Which replication-check kwarg ``fn`` takes (the module promotion
+    and the kwarg rename landed in *different* jax releases, so the two
+    must be detected independently)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return default
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return name
+    return default
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` (new name) is translated to ``check_rep`` (old name) when
+    the resolved function still takes it. ``None`` leaves the library
+    default in place on either version.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        default = "check_vma"
+    else:
+        from jax.experimental.shard_map import shard_map as sm
+
+        default = "check_rep"
+    kwargs: dict[str, Any] = {}
+    if check_vma is not None:
+        kwargs[_kwarg_name(sm, default)] = check_vma
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across the TPUCompilerParams rename."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

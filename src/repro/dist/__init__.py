@@ -1,0 +1,34 @@
+"""``repro.dist`` — the mesh-sharding subsystem.
+
+This package is the JAX-native analogue of the paper's region-constrained
+memory packing (FCMP). The correspondence, term by term:
+
+===========================  ==============================================
+paper (FPGA floorplan)       this package (device mesh)
+===========================  ==============================================
+logical parameter memory     a parameter / batch / cache pytree leaf
+physical RAM block           a slice of a mesh axis
+floorplan region (SLR)       a mesh-axis *role* (tensor / batch / pipeline)
+bin (stack of buffers)       one dim entry of a ``PartitionSpec``
+"bins never mix regions"     a dim entry never combines axes of different
+                             roles (``legalize.validate_spec``)
+bin height divisibility      a sharded dim must divide the product of its
+                             mesh-axis sizes (``legalize.divides``)
+packing fallback             replication, when no divisible placement
+                             exists (the paper's "spill to URAM/LUTRAM")
+===========================  ==============================================
+
+Layering:
+
+* ``mesh_axes``  — axis-role discovery over anything exposing
+  ``axis_names`` / ``shape`` (a real ``jax.sharding.Mesh`` or a test fake;
+  no devices are ever touched).
+* ``legalize``   — the divisibility checker, candidate-placement search
+  and the never-mix-regions spec validator.
+* ``rules``      — per-family leaf rules: which dims of which named leaves
+  prefer tensor-parallel, expert-parallel or table sharding.
+* ``sharding``   — the public policy: ``param_specs``, ``batch_specs``,
+  ``cache_specs``, ``token_spec``.
+"""
+
+from repro.dist import sharding  # noqa: F401 — canonical entry point

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -250,7 +252,7 @@ def flash_fwd(
             pltpu.VMEM((qb, 1), jnp.float32),
             pltpu.VMEM((qb, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -291,7 +293,7 @@ def flash_bwd(
         out_specs=pl.BlockSpec((1, qb, d), lambda bhi, qi, kj: (bhi, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((qb, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -324,7 +326,7 @@ def flash_bwd(
             pltpu.VMEM((kb, d), jnp.float32),
             pltpu.VMEM((kb, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -28,19 +28,15 @@ def _sds(shape, dtype):
 
 def abstract_batch(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
     """Train/prefill batch stand-ins: {tokens, labels[, modality stub]}."""
+    from repro.models.config import modality_batch_leaves
+
     b, s = shape.global_batch, shape.seq_len
     out = {
         "tokens": _sds((b, s), jnp.int32),
         "labels": _sds((b, s), jnp.int32),
     }
-    if cfg.family == "vlm":
-        out["prefix_embeds"] = _sds(
-            (b, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype)
-        )
-    if cfg.family == "encdec":
-        out["frames"] = _sds(
-            (b, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype)
-        )
+    for name, rest in modality_batch_leaves(cfg).items():
+        out[name] = _sds((b,) + rest, jnp.dtype(cfg.dtype))
     return out
 
 
@@ -60,11 +56,9 @@ def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
     )
     cache = jax.eval_shape(fn)
     if cfg.family == "encdec":
-        b = shape.global_batch
-        kv = (cfg.n_layers, b, cfg.frontend_len, cfg.n_kv, cfg.hd)
-        cache = dict(cache)
-        cache["cross_k"] = _sds(kv, jnp.dtype(cfg.dtype))
-        cache["cross_v"] = _sds(kv, jnp.dtype(cfg.dtype))
+        from repro.models.encdec import with_cross_caches
+
+        cache = with_cross_caches(cache, cfg, shape.global_batch)
     return cache
 
 
@@ -113,10 +107,10 @@ def opt_shardings(cfg: ModelConfig, mesh, opt: AdamW | None = None):
 
 
 def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
-    specs = shd.cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
     cache = abstract_cache(cfg, shape)
-    if cfg.family == "encdec":
-        specs = dict(specs)
+    specs = shd.cache_specs(
+        cfg, mesh, shape.global_batch, shape.seq_len, cache=cache
+    )
     return _named(mesh, {k: specs[k] for k in cache})
 
 

@@ -21,6 +21,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -232,7 +234,7 @@ def flash_attention_seq_sharded(
 
     ba = tuple(a for a in batch_axes if a in mesh.axis_names)
     bspec = ba if ba else None
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(
@@ -299,9 +301,11 @@ def decode_attention_split_d(
 
     ba = tuple(a for a in batch_axes if a in mesh.axis_names)
     spec = P(ba if ba else None, None, None, axis)
-    return jax.shard_map(
+    return compat.shard_map(
         local,
         mesh=mesh,
         in_specs=(spec, spec, spec, P()),
         out_specs=spec,
+        # partial scores vary per d-shard and are psum-reconstructed inside
+        check_vma=False,
     )(q, k_cache, v_cache, cache_len)

@@ -156,6 +156,18 @@ class ShapeConfig:
         return self.seq_len * self.global_batch
 
 
+def modality_batch_leaves(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    """Extra (non-token) batch leaves per family: name -> per-example
+    shape (batch dim excluded). Single source for the launch stand-ins
+    (``launch.specs.abstract_batch``) and the sharding policy
+    (``dist.sharding.batch_specs``)."""
+    if cfg.family == "vlm":
+        return {"prefix_embeds": (cfg.n_patches, cfg.d_model)}
+    if cfg.family == "encdec":
+        return {"frames": (cfg.frontend_len, cfg.d_model)}
+    return {}
+
+
 SHAPES: dict[str, ShapeConfig] = {
     "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
     "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),

@@ -99,6 +99,24 @@ def loss_fn(params, cfg, tokens, labels, frames, aux_weight: float = 0.0):
     return cross_entropy(lg, labels, cfg.vocab) + aux_weight * aux, (aux,)
 
 
+def cross_cache_struct(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """Abstract stand-in for one cross-attention cache leaf, (L, B, F,
+    Hkv, D) — the single source of the shape for ``launch.specs`` (input
+    stand-ins) and ``dist.sharding`` (cache specs)."""
+    shape = (cfg.n_layers, batch, cfg.frontend_len, cfg.n_kv, cfg.hd)
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.dtype))
+
+
+def with_cross_caches(cache: dict, cfg: ModelConfig, batch: int) -> dict:
+    """Copy of ``cache`` with abstract cross-attention leaves appended —
+    the one place the decode-state tree gains its encdec extras."""
+    kv = cross_cache_struct(cfg, batch)
+    out = dict(cache)
+    out.setdefault("cross_k", kv)
+    out.setdefault("cross_v", kv)
+    return out
+
+
 def init_decode_state(params, cfg: ModelConfig, frames, max_len: int) -> dict:
     """Precompute cross K/V for every decoder layer + empty self cache."""
     enc = encode(params, cfg, frames)

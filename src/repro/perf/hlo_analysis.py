@@ -47,6 +47,19 @@ COLLECTIVE_OPS = (
 )
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalised across jax versions.
+
+    Older jax returns a list with one properties-dict per partition; newer
+    jax returns the dict directly. Callers always get a plain dict (empty
+    when XLA reports nothing).
+    """
+    props = compiled.cost_analysis()
+    if isinstance(props, (list, tuple)):
+        props = props[0] if props else {}
+    return dict(props)
+
+
 def shape_bytes(shape_str: str) -> int:
     """Bytes of an HLO shape string (tuples summed, layouts ignored)."""
     total = 0

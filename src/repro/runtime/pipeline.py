@@ -81,13 +81,13 @@ def pipeline_forward(
         )
         return outs
 
-    from jax.experimental.shard_map import shard_map
+    from repro import compat
 
-    fn = shard_map(
+    fn = compat.shard_map(
         stage_prog,
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_rep=False,
+        check_vma=False,
     )
     return fn(stage_params, x_microbatches)

@@ -1,0 +1,20 @@
+"""Tier-1 test configuration.
+
+Makes the suite hermetic: ``src`` is put on ``sys.path`` (so plain
+``python -m pytest`` works without exporting PYTHONPATH), and when the
+real ``hypothesis`` library is not installed (the pinned container image
+cannot pip-install; CI installs it via the ``test`` extra in
+pyproject.toml) the deterministic stub from ``repro.testing`` is
+registered so the property suites still collect and run.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.testing.hypothesis_stub import install_if_missing
+
+install_if_missing()

@@ -29,7 +29,7 @@ def test_int8_allreduce_multidevice():
     out = run_forced("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax.experimental.shard_map import shard_map
+        from repro.compat import shard_map
         from repro.optim.compression import int8_allreduce
         mesh = jax.make_mesh((8,), ("data",))
         g = jnp.arange(64, dtype=jnp.float32).reshape(8, 8) / 64.0
