@@ -15,6 +15,7 @@ from benchmarks import (
     fig2_efficiency,
     kernel_bench,
     roofline_table,
+    serve_bench,
     table1_bnn_pynq,
     table2_rn50,
     table4_packing,
@@ -29,6 +30,7 @@ BENCHES = [
     ("table5_throughput (paper Table V)", table5_throughput),
     ("kernel_bench (FCMP packed weights on TPU)", kernel_bench),
     ("roofline_table (40-cell dry-run)", roofline_table),
+    ("serve_bench (KV-pool continuous batching vs fixed-batch)", serve_bench),
 ]
 
 

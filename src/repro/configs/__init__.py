@@ -43,23 +43,52 @@ ACCEL_IDS = ["cnv_w1a1", "cnv_w2a2", "rn50_w1a2", "rn50_w2a2"]
 
 
 def canonical(name: str) -> str:
-    return ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    """Canonical module id for an arch/accelerator name.
+
+    Unknown names raise ``ValueError`` listing the valid ids, so every
+    ``--arch``-taking driver (train / serve / dryrun) fails cleanly
+    instead of surfacing a raw ``ModuleNotFoundError``.
+    """
+    cand = ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    if cand not in ARCH_IDS and cand not in ACCEL_IDS:
+        raise ValueError(
+            f"unknown arch {name!r}; valid archs: {', '.join(ARCH_IDS)}; "
+            f"valid accelerators: {', '.join(ACCEL_IDS)}"
+        )
+    return cand
+
+
+def canonical_arch(name: str) -> str:
+    """``canonical`` restricted to LM archs (what ``--arch`` drivers take)."""
+    cand = canonical(name)
+    if cand in ACCEL_IDS:
+        raise ValueError(
+            f"{name!r} is an FPGA accelerator config, not an LM arch; "
+            f"use get_accelerator(). Valid archs: {', '.join(ARCH_IDS)}"
+        )
+    return cand
 
 
 def get_config(name: str) -> ModelConfig:
-    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    mod = importlib.import_module(f"repro.configs.{canonical_arch(name)}")
     return mod.CONFIG
 
 
 def get_smoke_config(name: str) -> ModelConfig:
-    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    mod = importlib.import_module(f"repro.configs.{canonical_arch(name)}")
     if hasattr(mod, "SMOKE"):
         return mod.SMOKE
     return reduced(mod.CONFIG)
 
 
 def get_accelerator(name: str):
-    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    cand = canonical(name)
+    if cand not in ACCEL_IDS:
+        raise ValueError(
+            f"{name!r} is not an accelerator config; valid accelerators: "
+            f"{', '.join(ACCEL_IDS)}"
+        )
+    mod = importlib.import_module(f"repro.configs.{cand}")
     return mod.ACCEL
 
 

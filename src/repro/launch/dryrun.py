@@ -265,6 +265,14 @@ def main(argv=None) -> int:
 
     set_attn_impl(args.attn_impl)
 
+    if args.arch != "all":
+        try:
+            from repro.configs import canonical_arch
+
+            canonical_arch(args.arch)
+        except ValueError as e:
+            print(f"[dryrun] {e}")
+            return 2
     archs = ARCH_IDS if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

@@ -1,9 +1,14 @@
-"""Batched serving driver: continuous-batching decode loop.
+"""Serving driver: continuous batching over a shared KV pool.
 
-Prefill + decode steps from ``runtime.steps``, a simple admission queue
-with a fixed decode batch (requests join as slots free up), and per-slot
-ring KV caches. On this container it serves a reduced config on CPU; the
-same step functions lower at production scale in the dry-run.
+The default engine is the ``runtime.scheduler`` subsystem: one physical
+KV pool (``runtime.kv_pool``, block-granular, allocated/freed per
+request), token-budget admission, single-step batched prefill, and
+paged decode lanes that each run at their own depth. The legacy
+fixed-batch loop (per-slot ring caches, lockstep positions, prompt
+replayed token-by-token through the decode path) is kept as
+``--engine fixed`` — it is the A/B baseline for ``benchmarks/serve_bench``
+and the fallback for the SSM/hybrid families, whose decode state is
+fixed-size per slot and needs no pool.
 
 Usage::
 
@@ -12,6 +17,7 @@ Usage::
 """
 
 import argparse
+import functools
 import time
 
 import jax
@@ -20,10 +26,167 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import lm
+from repro.models.config import ATTN_KV_FAMILIES
+from repro.runtime.kv_pool import KVPool, choose_block_tokens
+from repro.runtime.scheduler import Scheduler
 from repro.runtime.steps import make_serve_step
 
 
-def main(argv=None) -> int:
+def make_requests(args, vocab: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(args.seed)
+    return [
+        rng.integers(0, vocab, size=(args.prompt_len,)).astype(np.int32)
+        for _ in range(args.requests)
+    ]
+
+
+def build_pool_engine(cfg, params, args) -> Scheduler:
+    total = args.prompt_len + args.gen_len
+    block_tokens = args.block_tokens or choose_block_tokens(
+        [total] * args.requests
+    )
+    pool = KVPool.for_slots(
+        cfg, slots=args.batch, max_len=args.max_len, block_tokens=block_tokens
+    )
+    return Scheduler(
+        cfg,
+        params,
+        pool,
+        slots=args.batch,
+        max_len=args.max_len,
+        token_budget=args.token_budget or None,
+        decode_per_round=args.rf or None,
+    )
+
+
+def run_pool_engine(cfg, params, args) -> dict:
+    sched = build_pool_engine(cfg, params, args)
+    for prompt in make_requests(args, cfg.vocab):
+        sched.submit(prompt, args.gen_len)
+    t0 = time.monotonic()
+    stats = sched.run()
+    dt = time.monotonic() - t0
+    outputs = sched.outputs()
+    assert stats.completed == args.requests, (stats.completed, args.requests)
+    assert all(len(v) == args.gen_len for v in outputs.values())
+    return {
+        "engine": "pool",
+        "requests": args.requests,
+        "generated_tokens": stats.generated_tokens,
+        "steps": stats.prefill_steps + stats.decode_steps,
+        "prefill_steps": stats.prefill_steps,
+        "decode_steps": stats.decode_steps,
+        "wall_s": dt,
+        "tokens_per_s": stats.generated_tokens / dt if dt > 0 else 0.0,
+        "decode_step_ms": (
+            stats.decode_time / stats.decode_steps * 1e3
+            if stats.decode_steps
+            else 0.0
+        ),
+        "mean_ttft_s": stats.mean_ttft,
+        "pool_utilization": stats.steady_state_utilization,
+        "block_tokens": sched.pool.block_tokens,
+        "outputs": outputs,
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fixed_step(cfg):
+    return jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+
+
+def run_fixed_engine(cfg, params, args) -> dict:
+    """The legacy fixed-batch loop: per-slot ring caches, lockstep
+    positions, prompts replayed through the decode path. Drains the queue
+    to empty (requests % batch != 0 included)."""
+    if args.prompt_len + args.gen_len > args.max_len:
+        # the ring cache holds max_len rows; past that, rows clobber
+        # (caught in main -> exit 2, matching the pool engine's check)
+        raise ValueError(
+            f"request needs {args.prompt_len + args.gen_len} tokens "
+            f"> max_len {args.max_len}"
+        )
+    serve = _jitted_fixed_step(cfg)
+    queue = make_requests(args, cfg.vocab)
+    b = args.batch
+    cache = None  # allocated at each wave boundary below
+    active = [None] * b
+    to_go = np.zeros(b, np.int32)
+    fed = np.zeros((b,), np.int32)
+    prompts: list[np.ndarray | None] = [None] * b
+    outputs: dict[int, list[int]] = {}
+    ttft: dict[int, float] = {}
+    next_req = 0
+    done = 0
+    steps = 0
+    t0 = time.monotonic()
+    token = np.zeros((b, 1), np.int32)
+    decode_time = 0.0
+    gen_steps = 0
+    while done < args.requests:
+        if next_req < len(queue) and all(a is None for a in active):
+            # wave boundary (lockstep lengths drain all slots at once):
+            # fresh ring + len=0 so a long trace can't overflow max_len
+            # rows and clobber the new wave's KV history
+            cache = lm.init_cache(cfg, b, args.max_len)
+            token[:] = 0
+        for i in range(b):
+            if active[i] is None and next_req < len(queue):
+                active[i] = next_req
+                prompts[i] = queue[next_req]
+                fed[i] = 0
+                to_go[i] = args.gen_len
+                outputs[next_req] = []
+                next_req += 1
+        ts = time.monotonic()
+        logits, cache = serve(params, jnp.asarray(token), cache)
+        steps += 1
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        generated_this_step = 0
+        for i in range(b):
+            if active[i] is None:
+                continue
+            if fed[i] < len(prompts[i]):  # still feeding the prompt
+                token[i, 0] = prompts[i][fed[i]]
+                fed[i] += 1
+            else:
+                if not outputs[active[i]]:
+                    ttft[active[i]] = time.monotonic() - t0
+                generated_this_step += 1
+                outputs[active[i]].append(int(nxt[i]))
+                token[i, 0] = nxt[i]
+                to_go[i] -= 1
+                if to_go[i] <= 0:
+                    done += 1
+                    active[i] = None
+        if generated_this_step:
+            # a decoding step, counted once per step, host bookkeeping
+            # included (the pool engine's decode_time is measured the same
+            # way around its round loop)
+            decode_time += time.monotonic() - ts
+            gen_steps += 1
+        if steps > args.requests * (args.prompt_len + args.gen_len) + 64:
+            raise RuntimeError("serving loop failed to drain the queue")
+    dt = time.monotonic() - t0
+    total_tokens = sum(len(v) for v in outputs.values())
+    return {
+        "engine": "fixed",
+        "requests": args.requests,
+        "generated_tokens": total_tokens,
+        "steps": steps,
+        "prefill_steps": 0,
+        "decode_steps": steps,
+        "wall_s": dt,
+        "tokens_per_s": total_tokens / dt if dt > 0 else 0.0,
+        "decode_step_ms": decode_time / gen_steps * 1e3 if gen_steps else 0.0,
+        "mean_ttft_s": sum(ttft.values()) / len(ttft) if ttft else 0.0,
+        "pool_utilization": 0.0,
+        "block_tokens": 0,
+        "outputs": outputs,
+    }
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm_360m")
     ap.add_argument("--smoke", action="store_true")
@@ -33,74 +196,50 @@ def main(argv=None) -> int:
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    ap.add_argument("--engine", choices=["pool", "fixed"], default="pool")
+    ap.add_argument("--block-tokens", type=int, default=0,
+                    help="KV-pool block size; 0 = bin-cost sweep")
+    ap.add_argument("--rf", type=int, default=0,
+                    help="decode steps per admission round; 0 = Eq. 2 default")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help="admission token budget; 0 = pool capacity")
+    return ap
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    except ValueError as e:
+        print(f"[serve] {e}")
+        return 2
     if cfg.family == "encdec":
         print("[serve] encdec serving is exercised in tests; use an LM arch")
         return 0
-    rng = np.random.default_rng(args.seed)
+    engine = args.engine
+    if engine == "pool" and cfg.family not in ATTN_KV_FAMILIES:
+        print(f"[serve] family {cfg.family!r} keeps fixed-size per-slot "
+              "decode state; using the fixed-batch engine")
+        engine = "fixed"
+
     params = lm.init_params(cfg, jax.random.key(args.seed))
-    serve = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
-
-    # request queue: each request is a prompt of prompt_len tokens
-    queue = [
-        rng.integers(0, cfg.vocab, size=(args.prompt_len,)).astype(np.int32)
-        for _ in range(args.requests)
-    ]
-    b = args.batch
-    cache = lm.init_cache(cfg, b, args.max_len)
-    active = [None] * b  # request id per slot
-    to_go = np.zeros(b, np.int32)
-    fed = np.zeros((b,), np.int32)  # next token to feed per slot
-    prompts: list[np.ndarray | None] = [None] * b
-    outputs: dict[int, list[int]] = {}
-    next_req = 0
-    done = 0
-    steps = 0
-    t0 = time.monotonic()
-
-    # NOTE: single shared cache["len"] means slots advance in lockstep;
-    # a slot joining mid-stream replays its prompt through the decode path
-    # (teacher forcing) — simple continuous batching without per-slot
-    # position bookkeeping. Positions are per-cache-global, which is fine
-    # for RoPE at these lengths.
-    token = np.zeros((b, 1), np.int32)
-    while done < args.requests:
-        # admit requests into free slots
-        for i in range(b):
-            if active[i] is None and next_req < len(queue):
-                active[i] = next_req
-                prompts[i] = queue[next_req]
-                fed[i] = 0
-                to_go[i] = args.gen_len
-                outputs[next_req] = []
-                next_req += 1
-        # build the next token per slot (prompt replay or generated token)
-        logits, cache = serve(params, jnp.asarray(token), cache)
-        steps += 1
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
-        for i in range(b):
-            if active[i] is None:
-                continue
-            if fed[i] < len(prompts[i]):  # still feeding the prompt
-                token[i, 0] = prompts[i][fed[i]]
-                fed[i] += 1
-            else:
-                outputs[active[i]].append(int(nxt[i]))
-                token[i, 0] = nxt[i]
-                to_go[i] -= 1
-                if to_go[i] <= 0:
-                    done += 1
-                    active[i] = None
-        if steps > args.requests * (args.prompt_len + args.gen_len) + 64:
-            raise RuntimeError("serving loop failed to drain the queue")
-    dt = time.monotonic() - t0
-    total_tokens = sum(len(v) for v in outputs.values())
-    print(
-        f"[serve] {args.requests} requests, {total_tokens} generated tokens "
-        f"in {steps} steps, {dt:.1f}s ({total_tokens/dt:.1f} tok/s)"
+    run = run_pool_engine if engine == "pool" else run_fixed_engine
+    try:
+        m = run(cfg, params, args)
+    except ValueError as e:
+        # bad request/budget geometry (e.g. prompt+gen > --max-len)
+        print(f"[serve] {e}")
+        return 2
+    line = (
+        f"[serve/{m['engine']}] {m['requests']} requests, "
+        f"{m['generated_tokens']} generated tokens in {m['steps']} steps "
+        f"({m['prefill_steps']} prefill + {m['decode_steps']} decode), "
+        f"{m['wall_s']:.1f}s ({m['tokens_per_s']:.1f} tok/s, "
+        f"TTFT {m['mean_ttft_s']*1e3:.0f} ms)"
     )
+    if m["engine"] == "pool":
+        line += f", pool utilization {m['pool_utilization']*100:.1f}%"
+    print(line)
     return 0
 
 

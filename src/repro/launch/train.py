@@ -13,7 +13,6 @@ Usage::
 """
 
 import argparse
-import dataclasses
 
 import jax
 import numpy as np
@@ -57,9 +56,30 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    try:
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    except ValueError as e:
+        print(f"[train] {e}")
+        return 2
     if args.quant:
-        cfg = dataclasses.replace(cfg, w_bits=args.quant)
+        # Families with a dense FFN store 1/2-bit weights as packed uint8
+        # carriers (repro.models.lm), which are inference-only: no
+        # gradients, no optimizer moments (optim.adamw._is_frozen).
+        from repro.models.config import PACKING_FAMILIES
+
+        if cfg.family in PACKING_FAMILIES:
+            print(
+                f"[train] --quant {args.quant} is not trainable: "
+                f"{cfg.family!r} archs pack FFN weights into inference-only "
+                "uint8 carriers. Train dense (no --quant), then quantize the "
+                "checkpoint for serving (examples/pack_and_port.py, "
+                "launch/serve.py)."
+            )
+            return 2
+        # non-packing families: leave cfg untouched so the message stays
+        # true downstream (ckpt metadata, traffic modeling keyed on w_bits)
+        print(f"[train] note: --quant has no effect on family "
+              f"{cfg.family!r} (no dense FFN to pack); ignoring")
     mesh = (
         make_production_mesh() if args.production_mesh else fit_mesh()
     )

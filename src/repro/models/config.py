@@ -22,6 +22,18 @@ def pad_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+# Families whose decode state is a growing attention KV cache — the ones
+# the paged serving path (runtime.kv_pool / lm.decode_step_paged) covers.
+# ssm/hybrid keep fixed-size per-slot state; encdec has its own decoder.
+ATTN_KV_FAMILIES = ("dense", "vlm", "moe")
+
+# Families whose dense FFN stores 1/2-bit weights as packed uint8 carriers
+# when w_bits is set (lm._init_ffn packs every non-expert FFN; MoE expert
+# einsums and SSM blocks have no dense FFN to pack). Packed carriers are
+# inference-only: launch.train rejects --quant for these families.
+PACKING_FAMILIES = ("dense", "vlm", "encdec", "hybrid")
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.config import ModelConfig
+from repro.models.config import ATTN_KV_FAMILIES, ModelConfig
 from repro.models.layers import (
     apply_rope,
     cross_entropy,
@@ -552,16 +552,25 @@ def set_decode_split_d(mesh, axis: str = "model",
     _DECODE_SPLIT_D.update(mesh=mesh, axis=axis, batch_axes=batch_axes)
 
 
-def _decode_attn_block(lp, cfg, x, k_cache, v_cache, pos, *, window=0):
-    """One-token attention against one layer's cache; returns new k/v row."""
+def _decode_qkv(lp, cfg, x, pos_b):
+    """Shared one-token q/k/v projection + RoPE for every decode path
+    (per-slot ring and pool-indexed paged); ``pos_b`` is (B, 1) positions.
+    Keeping this single keeps the paged and ring paths numerically equal."""
     b = x.shape[0]
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     q = dense(h, lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
     k = dense(h, lp["wk"]).reshape(b, 1, cfg.n_kv, cfg.hd)
     v = dense(h, lp["wv"]).reshape(b, 1, cfg.n_kv, cfg.hd)
-    pos_b = jnp.broadcast_to(pos[None, None], (b, 1))
     q = apply_rope(q, pos_b, cfg.rope_theta)
     k = apply_rope(k, pos_b, cfg.rope_theta)
+    return q, k, v
+
+
+def _decode_attn_block(lp, cfg, x, k_cache, v_cache, pos, *, window=0):
+    """One-token attention against one layer's cache; returns new k/v row."""
+    b = x.shape[0]
+    pos_b = jnp.broadcast_to(pos[None, None], (b, 1))
+    q, k, v = _decode_qkv(lp, cfg, x, pos_b)
     w = k_cache.shape[1]
     slot = pos % w if window else jnp.minimum(pos, w - 1)
     k_cache = attn.cache_insert(k_cache, k, slot)
@@ -680,3 +689,94 @@ def prefill(
     serving engine's job; the dry-run lowers the compute graph)."""
     lg, _ = forward(params, cfg, tokens, prefix_embeds=prefix_embeds)
     return lg
+
+
+def prefill_with_cache(
+    params: dict, cfg: ModelConfig, tokens: jnp.ndarray, last_idx: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence prefill that *keeps* the per-layer K/V rows.
+
+    tokens: (B, S) right-padded prompts; ``last_idx`` the index of the last
+    real token. Causality makes the padded tail inert for positions
+    <= last_idx in the dense/vlm families ONLY — MoE capacity routing is
+    cross-token, so moe callers must pass unpadded prompts (the scheduler
+    does). Returns (next-token logits (B, 1, V), ks, vs) with
+    ks/vs stacked (L, B, S, n_kv, hd) — already RoPE'd, i.e. exactly the
+    rows the decode cache stores. Attention-KV families only.
+    """
+    if cfg.family not in ATTN_KV_FAMILIES:
+        raise ValueError(f"prefill_with_cache: unsupported family {cfg.family}")
+    x = embed(tokens, params["embed"], _dt(cfg))
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def layer_fn(carry, lp):
+        x, aux = carry
+        x, (k, v) = _attn_block(
+            lp, cfg, x, positions, causal=True, window=cfg.sliding_window
+        )
+        x, a = _ffn_block(lp, cfg, x)
+        return (x, aux + a), (k, v)
+
+    (x, _), (ks, vs) = jax.lax.scan(
+        layer_fn, (x, jnp.zeros((), jnp.float32)), params["layers"]
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x_last, table, cfg.vocab), ks, vs
+
+
+def decode_step_paged(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    row_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One serving step against a shared row-addressed KV pool.
+
+    token: (B, 1) next token per decode lane; pool_k/pool_v:
+    (L, R, n_kv, hd) physical pools; row_table: (B, S_max) physical row
+    index of each lane's logical cache position (scratch-row padded);
+    lengths: (B,) tokens already held per lane. The new token's K/V row is
+    scattered to ``row_table[b, lengths[b]]``, then each lane attends over
+    its gathered rows with per-lane positions (no lockstep shared length —
+    lanes at different depths coexist in one batched step).
+
+    Returns (logits (B, 1, V), new pool_k, new pool_v).
+    """
+    if cfg.family not in ATTN_KV_FAMILIES:
+        raise ValueError(f"decode_step_paged: unsupported family {cfg.family}")
+    x = embed(token, params["embed"], _dt(cfg))
+    b = x.shape[0]
+    s_max = row_table.shape[1]
+    pos_b = lengths[:, None]  # (B, 1) position of the incoming token
+    write_rows = jnp.take_along_axis(
+        row_table, jnp.clip(lengths, 0, s_max - 1)[:, None], axis=1
+    )[:, 0]
+
+    def layer_fn(carry, lp_kv):
+        x, aux = carry
+        lp, pk, pv = lp_kv  # pk/pv: (R, n_kv, hd) one layer's pool
+        q, k, v = _decode_qkv(lp, cfg, x, pos_b)
+        pk = pk.at[write_rows].set(k[:, 0])
+        pv = pv.at[write_rows].set(v[:, 0])
+        o = attn.decode_attention(
+            q, pk[row_table], pv[row_table], (lengths + 1)[:, None],
+            window=cfg.sliding_window,
+        )
+        x = x + dense(o.reshape(b, 1, -1), lp["wo"])
+        x, a = _ffn_block(lp, cfg, x)
+        return (x, aux + a), (pk, pv)
+
+    (x, _), (pks, pvs) = jax.lax.scan(
+        layer_fn,
+        (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], pool_k, pool_v),
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x, table, cfg.vocab), pks, pvs

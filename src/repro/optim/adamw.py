@@ -21,9 +21,13 @@ class OptState(NamedTuple):
     nu: Any  # second moment, f32
 
 
-def _is_packed_leaf(path) -> bool:
-    """FCMP-packed carriers are inference-only: no gradient, no moments."""
-    return any(getattr(p, "key", None) == "packed" for p in path)
+def _is_frozen(p, g) -> bool:
+    """Leaves excluded from differentiation — FCMP-packed carriers are
+    inference-only: integer (packed uint8) params, or float0 tangents
+    from value_and_grad(allow_int)."""
+    return g.dtype == jax.dtypes.float0 or not jnp.issubdtype(
+        p.dtype, jnp.inexact
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,10 +42,19 @@ class AdamW:
 
     def init(self, params) -> OptState:
         # mu and nu must be DISTINCT buffer trees (aliased trees break
-        # donation: "attempt to donate the same buffer twice").
-        mu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        return OptState(jnp.zeros((), jnp.int32), mu, nu)
+        # donation: "attempt to donate the same buffer twice"). Frozen
+        # integer leaves (packed uint8 carriers) never update, so they get
+        # scalar placeholders instead of full-shape dead moment buffers.
+        def moment(p):
+            if not jnp.issubdtype(p.dtype, jnp.inexact):
+                return jnp.zeros((), jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return OptState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(moment, params),
+            jax.tree.map(moment, params),
+        )
 
     def schedule(self, step) -> jnp.ndarray:
         warm = jnp.minimum(1.0, (step + 1) / max(1, self.warmup_steps))
@@ -53,6 +66,7 @@ class AdamW:
             sum(
                 jnp.sum(jnp.square(g.astype(jnp.float32)))
                 for g in jax.tree.leaves(grads)
+                if g.dtype != jax.dtypes.float0
             )
         )
         clip = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-9))
@@ -62,6 +76,8 @@ class AdamW:
         bc2 = 1.0 - self.b2 ** step.astype(jnp.float32)
 
         def upd(p, g, m, v):
+            if _is_frozen(p, g):  # packed carriers pass through untouched
+                return p, m, v
             g = g.astype(jnp.float32) * clip
             m = self.b1 * m + (1 - self.b1) * g
             v = self.b2 * v + (1 - self.b2) * g * g

@@ -1,0 +1,347 @@
+"""Shared physical KV pool for continuous-batching decode (serving FCMP).
+
+The paper packs many logical weight buffers into one physical BRAM and
+compensates with a faster memory clock (``core.gals``); the serving analog
+packs many per-request KV caches into one contiguous physical pool and
+compensates with the scheduler's decode/admission interleave. The mapping:
+
+    logical buffer      -> one request's KV cache
+    physical BRAM block -> a fixed ``block_tokens``-row pool block
+    bin height H_B      -> co-resident requests per pool
+    paper Eq. 1         -> ``utilization()`` (held tokens / held rows)
+
+Block geometry and fragmentation accounting reuse ``core.packing`` /
+``core.resource_model`` directly: a request's footprint is a
+``WeightBuffer`` (width 1 "lane", depth = tokens), a pool block is a
+``RamPrimitive`` with a single legal aspect ratio ``(1, block_tokens)``,
+and ``pack_ffd`` provides the first-fit-decreasing machinery for the
+block-size sweep and the tail-sharing lower bound.
+
+The pool is block-granular and blocks are private to one request (KV rows
+cannot be shared, unlike read-only weights), so physical placement is
+``baseline_packing`` of the request buffers; ``fragmentation_report()``
+also quotes the ``pack_ffd`` bound — what tail-sharing would save — the
+same baseline-vs-packed comparison the paper's Table II makes for BRAM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buffers import WeightBuffer
+from repro.core.packing import PackItem, baseline_packing, pack_ffd
+from repro.core.resource_model import RamPrimitive
+from repro.models.config import ATTN_KV_FAMILIES, ModelConfig
+
+SCRATCH_BLOCK = 0  # block 0 is never allocated; idle slots write/read it
+
+# in-place row insertion into a donated pool buffer (one trace per
+# (pool shape, row count); the .at[].set outside jit would copy the pool)
+_row_scatter = jax.jit(
+    lambda pool, rows, vals: pool.at[:, rows].set(vals), donate_argnums=(0,)
+)
+
+
+def kv_block_ram(block_tokens: int) -> RamPrimitive:
+    """A pool block as a RAM primitive: one legal shape, 1 x block_tokens."""
+    return RamPrimitive(
+        name="KVBLOCK",
+        capacity_bits=block_tokens,
+        n_ports=2,
+        configs=((1, block_tokens),),
+    )
+
+
+def request_buffer(rid: int, n_tokens: int) -> WeightBuffer:
+    """A request's KV footprint as a logical buffer (1 lane x tokens)."""
+    return WeightBuffer(f"req{rid}", width_bits=1, depth_words=n_tokens, w_bits=1)
+
+
+def choose_block_tokens(
+    lengths: list[int],
+    candidates: tuple[int, ...] = (4, 8, 16, 32, 64),
+    overhead_rows: float = 0.5,
+) -> int:
+    """Pick the block size minimising lifetime pool waste for a length mix.
+
+    A decode cache *grows* 1 -> L tokens, so the cost of a block size is
+    the request-lifetime average of (allocated rows - held tokens) plus a
+    per-block bookkeeping overhead (block-table entries, gather indices).
+    This is the same blocks_for() geometry sweep ``core.packing.bin_cost``
+    runs over BRAM aspect ratios: small blocks waste little tail but pay
+    per-block overhead, large blocks the reverse — ``overhead_rows`` is
+    what stops "always pick the smallest shape".
+    """
+    if not lengths:
+        return candidates[0]
+    counts = Counter(lengths)
+    best_t, best_cost = candidates[0], None
+    for t in candidates:
+        ram = kv_block_ram(t)
+        cost = 0.0
+        for length, n in counts.items():
+            blocks = [
+                request_buffer(0, l).blocks(ram)
+                for l in range(1, max(2, length + 1))
+            ]
+            waste = sum(b * t - l for l, b in enumerate(blocks, start=1))
+            cost += n * (waste + overhead_rows * sum(blocks)) / len(blocks)
+        if best_cost is None or cost < best_cost:
+            best_t, best_cost = t, cost
+    return best_t
+
+
+@dataclasses.dataclass
+class PoolStats:
+    n_blocks: int
+    block_tokens: int
+    held_blocks: int
+    held_tokens: int
+    free_blocks: int
+    committed_blocks: int
+
+    @property
+    def utilization(self) -> float:
+        """Serving Eq. 1: useful KV rows / physical rows held."""
+        if self.held_blocks == 0:
+            return 1.0
+        return self.held_tokens / (self.held_blocks * self.block_tokens)
+
+    @property
+    def occupancy(self) -> float:
+        return self.held_blocks / max(1, self.n_blocks)
+
+
+class KVPool:
+    """One contiguous physical KV cache, allocated/freed per request.
+
+    Device side: ``k``/``v`` are (L, n_blocks * block_tokens, n_kv, hd)
+    row-addressed arrays (the block is an allocator concept only). Host
+    side: a free-block inventory plus per-request block tables.
+
+    Admission reserves a *commitment* (the request's full block need from
+    ``blocks_for``) but hands out blocks lazily as tokens arrive, so
+    utilization stays high while on-demand growth can never fail:
+
+        invariant:  sum(committed - held) over live requests <= free blocks
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        n_blocks: int,
+        block_tokens: int,
+        dtype=None,
+    ):
+        if cfg.family not in ATTN_KV_FAMILIES:
+            raise ValueError(
+                f"KVPool serves attention-KV families; got {cfg.family!r} "
+                "(ssm/hybrid decode state is fixed-size per slot)"
+            )
+        if n_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the scratch block)")
+        self.cfg = cfg
+        self.n_blocks = n_blocks
+        self.block_tokens = block_tokens
+        self.ram = kv_block_ram(block_tokens)
+        dt = jnp.dtype(dtype or cfg.dtype)
+        rows = n_blocks * block_tokens
+        shape = (cfg.n_layers, rows, cfg.n_kv, cfg.hd)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        # block 0 reserved as scratch for idle decode lanes
+        self._free: list[int] = list(range(n_blocks - 1, SCRATCH_BLOCK, -1))
+        self._held: dict[int, list[int]] = {}
+        self._tokens: dict[int, int] = {}
+        self._committed: dict[int, int] = {}
+
+    @classmethod
+    def for_slots(
+        cls,
+        cfg: ModelConfig,
+        *,
+        slots: int,
+        max_len: int,
+        block_tokens: int,
+        dtype=None,
+    ) -> "KVPool":
+        """A pool sized so ``slots`` concurrent max_len requests always fit
+        (their full block commitments, plus the scratch block)."""
+        per_slot = -(-max_len // block_tokens)
+        return cls(
+            cfg,
+            n_blocks=1 + slots * per_slot,
+            block_tokens=block_tokens,
+            dtype=dtype,
+        )
+
+    # ---------------- geometry ----------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return request_buffer(0, n_tokens).blocks(self.ram)
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def outstanding_commitment(self) -> int:
+        return sum(
+            max(0, self._committed[r] - len(self._held[r])) for r in self._held
+        )
+
+    def max_rows(self, max_tokens: int) -> int:
+        """Fixed gather width for a serve step admitting <= max_tokens."""
+        return self.blocks_for(max_tokens) * self.block_tokens
+
+    # ---------------- lifecycle ----------------
+
+    def can_admit(self, total_tokens: int) -> bool:
+        need = self.blocks_for(total_tokens)
+        return self.free_blocks - self.outstanding_commitment >= need
+
+    def admit(self, rid: int, total_tokens: int) -> None:
+        if rid in self._held:
+            raise ValueError(f"request {rid} already admitted")
+        if not self.can_admit(total_tokens):
+            raise RuntimeError(
+                f"pool cannot admit request {rid} "
+                f"({self.blocks_for(total_tokens)} blocks needed, "
+                f"{self.free_blocks - self.outstanding_commitment} uncommitted)"
+            )
+        self._committed[rid] = self.blocks_for(total_tokens)
+        self._held[rid] = []
+        self._tokens[rid] = 0
+
+    def ensure_rows(self, rid: int, n_tokens: int) -> None:
+        """Grow the request's block list to hold ``n_tokens`` rows."""
+        held = self._held[rid]
+        while len(held) * self.block_tokens < n_tokens:
+            if len(held) >= self._committed[rid]:
+                raise RuntimeError(
+                    f"request {rid} exceeds its {self._committed[rid]}-block "
+                    "commitment"
+                )
+            # commitment accounting guarantees the free list is non-empty
+            held.append(self._free.pop())
+
+    def note_tokens(self, rid: int, n_tokens: int) -> None:
+        self.ensure_rows(rid, n_tokens)
+        self._tokens[rid] = n_tokens
+
+    def release(self, rid: int) -> None:
+        for b in self._held.pop(rid):
+            self._free.append(b)
+        del self._tokens[rid], self._committed[rid]
+
+    def live_requests(self) -> list[int]:
+        return list(self._held)
+
+    def blocks_held(self, rid: int) -> int:
+        return len(self._held[rid])
+
+    def tokens_held(self, rid: int) -> int:
+        return self._tokens[rid]
+
+    # ---------------- device-side addressing ----------------
+
+    def rows_of(self, rid: int, pad_to: int | None = None) -> np.ndarray:
+        """Physical row indices of the request's tokens, scratch-padded."""
+        t = self.block_tokens
+        rows = np.concatenate(
+            [np.arange(b * t, (b + 1) * t) for b in self._held[rid]]
+        ) if self._held[rid] else np.zeros((0,), np.int64)
+        if pad_to is not None:
+            pad = np.full((pad_to - len(rows),), SCRATCH_BLOCK * t, np.int64)
+            rows = np.concatenate([rows, pad])
+        return rows.astype(np.int32)
+
+    def scratch_rows(self, pad_to: int) -> np.ndarray:
+        return np.full((pad_to,), SCRATCH_BLOCK * self.block_tokens, np.int32)
+
+    def write_prefill(
+        self,
+        rid: int,
+        ks: jnp.ndarray,
+        vs: jnp.ndarray,
+        n_tokens: int | None = None,
+    ) -> None:
+        """Scatter a prefilled (L, P, n_kv, hd) KV prefix into the pool.
+
+        ``ks``/``vs`` may be right-padded past ``n_tokens`` (the prefill
+        bucket); padded rows land in the scratch block so the jitted
+        scatter traces once per bucket size, and the donated pool buffer
+        updates in place instead of copying the whole pool per admission.
+        """
+        p = n_tokens if n_tokens is not None else ks.shape[1]
+        self.note_tokens(rid, p)
+        rows = self.rows_of(rid)[:p]
+        if ks.shape[1] > p:
+            pad = np.full(
+                (ks.shape[1] - p,), SCRATCH_BLOCK * self.block_tokens, np.int32
+            )
+            rows = np.concatenate([rows, pad])
+        rows = jnp.asarray(rows)
+        self.k = _row_scatter(self.k, rows, ks.astype(self.k.dtype))
+        self.v = _row_scatter(self.v, rows, vs.astype(self.v.dtype))
+
+    # ---------------- accounting / reporting ----------------
+
+    def stats(self) -> PoolStats:
+        held_blocks = sum(len(b) for b in self._held.values())
+        return PoolStats(
+            n_blocks=self.usable_blocks,
+            block_tokens=self.block_tokens,
+            held_blocks=held_blocks,
+            held_tokens=sum(self._tokens.values()),
+            free_blocks=self.free_blocks,
+            committed_blocks=self.outstanding_commitment,
+        )
+
+    def validate(self) -> None:
+        """Allocator invariants: partition, no overlap, full accounting."""
+        held = [b for bs in self._held.values() for b in bs]
+        if len(held) != len(set(held)):
+            raise AssertionError("block allocated to two requests")
+        if SCRATCH_BLOCK in held or SCRATCH_BLOCK in self._free:
+            raise AssertionError("scratch block entered circulation")
+        if set(held) & set(self._free):
+            raise AssertionError("block simultaneously held and free")
+        if len(held) + len(self._free) != self.usable_blocks:
+            raise AssertionError("blocks leaked")
+        for rid, bs in self._held.items():
+            if self._tokens[rid] > len(bs) * self.block_tokens:
+                raise AssertionError(f"request {rid} overflows its blocks")
+
+    def fragmentation_report(self) -> dict:
+        """Baseline (private blocks) vs the ``pack_ffd`` tail-sharing bound.
+
+        The physical placement is one-request-per-block (KV rows are
+        mutable, unlike the paper's read-only weights), i.e.
+        ``baseline_packing``; FFD with height H_B=4 quotes what packing
+        request tails into shared blocks would save — the serving analog
+        of the paper's baseline-vs-FCMP BRAM comparison.
+        """
+        items = [
+            PackItem(request_buffer(rid, self._tokens[rid]))
+            for rid in sorted(self._held)
+            if self._tokens[rid] > 0
+        ]
+        base = baseline_packing(items, self.ram)
+        packed = pack_ffd(items, max_height=4, ram=self.ram)
+        return {
+            "baseline_blocks": base.total_blocks,
+            "ffd_blocks": packed.total_blocks,
+            "baseline_efficiency": base.efficiency,
+            "ffd_efficiency": packed.efficiency,
+        }

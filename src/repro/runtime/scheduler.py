@@ -1,0 +1,323 @@
+"""Continuous-batching request scheduler over a shared KV pool.
+
+Request lifecycle: QUEUED -> PREFILL -> DECODE -> DONE. Admission is
+token-budget bound (the sum of committed prompt+generation tokens across
+in-flight requests never exceeds ``token_budget``) and pool-bound (the
+``KVPool`` must hold the request's full block commitment). Prefill is one
+batched full-sequence step per request (time-to-first-token is a single
+step, not prompt_len serve steps); decode lanes run the pool-indexed
+paged step, each lane at its own depth — no lockstep shared cache length.
+
+The frequency-compensation knob: ``decode_per_round`` (R_F) is how many
+decode steps run per admission/prefill round. It is the serving Eq. 2 of
+``core.gals``: a pool serving H_B co-resident requests through one
+physical memory sustains decode throughput iff the decode domain gets
+R_F >= H_B / N_ports rounds for every round the admission/prefill domain
+steals — so the default is ``ceil(required_rf(slots))``. R_F = 1 is a
+prefill-heavy schedule (fast admission, decode throughput dips); large
+R_F starves admission (TTFT grows) the way an under-clocked memory
+domain starves the paper's compute pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+import math
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gals import required_rf
+from repro.models.config import ModelConfig
+from repro.runtime.kv_pool import KVPool
+from repro.runtime.steps import make_paged_serve_step, make_pool_prefill_step
+
+
+# jit wrappers cached per config so schedulers (and benchmark A/B runs)
+# share compilations instead of retracing per instance
+@functools.lru_cache(maxsize=None)
+def _jitted_prefill(cfg: ModelConfig):
+    return jax.jit(make_pool_prefill_step(cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_decode(cfg: ModelConfig):
+    return jax.jit(make_paged_serve_step(cfg), donate_argnums=(2, 3))
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int
+    state: RequestState = RequestState.QUEUED
+    output: list[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first_token: float = 0.0
+    states_seen: list[RequestState] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    def _enter(self, state: RequestState) -> None:
+        self.state = state
+        self.states_seen.append(state)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    completed: int = 0
+    generated_tokens: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    rounds: int = 0
+    ttfts: list[float] = dataclasses.field(default_factory=list)
+    util_samples: list[float] = dataclasses.field(default_factory=list)
+    util_samples_any: list[float] = dataclasses.field(default_factory=list)
+    decode_time: float = 0.0
+
+    @property
+    def mean_ttft(self) -> float:
+        return sum(self.ttfts) / len(self.ttfts) if self.ttfts else 0.0
+
+    @property
+    def steady_state_utilization(self) -> float:
+        """Mean pool utilization over decode steps with all lanes busy;
+        if the trace never fills every lane (requests < slots), fall back
+        to steps with any lane busy rather than reporting 0."""
+        samples = self.util_samples or self.util_samples_any
+        if not samples:
+            return 0.0
+        return sum(samples) / len(samples)
+
+class Scheduler:
+    """Drives requests through a fixed set of decode lanes over a KVPool."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        pool: KVPool,
+        *,
+        slots: int,
+        max_len: int,
+        token_budget: int | None = None,
+        decode_per_round: int | None = None,
+        sample: Callable[[np.ndarray], np.ndarray] | None = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.pool = pool
+        self.slots = slots
+        self.max_len = max_len
+        self.s_max = pool.max_rows(max_len)
+        usable_tokens = pool.usable_blocks * pool.block_tokens
+        self.token_budget = min(token_budget or usable_tokens, usable_tokens)
+        # serving Eq. 2: R_F rounds of decode per admission round
+        self.decode_per_round = decode_per_round or max(
+            1, math.ceil(required_rf(slots))
+        )
+        self.sample = sample or (lambda lg: np.argmax(lg, axis=-1))
+        self._prefill = _jitted_prefill(cfg)
+        self._decode = _jitted_decode(cfg)
+        self.queue: deque[Request] = deque()
+        self.requests: dict[int, Request] = {}
+        self.active: list[int | None] = [None] * slots
+        self._token = np.zeros((slots, 1), np.int32)
+        self._lengths = np.zeros((slots,), np.int32)
+        # per-lane physical row tables, updated on admission / block
+        # growth / completion only (not rebuilt every decode step); the
+        # device copy is re-uploaded only when an event dirties the table
+        self._row_table = np.tile(pool.scratch_rows(self.s_max), (slots, 1))
+        self._row_table_dev = jnp.asarray(self._row_table)
+        self._table_dirty = False
+        self._next_rid = 0
+        self.stats = SchedulerStats()
+
+    # ---------------- submission ----------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        if len(prompt) < 1 or max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and max_new_tokens >= 1")
+        if len(prompt) + max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {len(prompt) + max_new_tokens} tokens "
+                f"> max_len {self.max_len}"
+            )
+        if len(prompt) + max_new_tokens > self.token_budget:
+            raise ValueError(
+                f"request needs {len(prompt) + max_new_tokens} tokens "
+                f"> token budget {self.token_budget}"
+            )
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens)
+        req.t_submit = time.monotonic()
+        req._enter(RequestState.QUEUED)
+        self.queue.append(req)
+        self.requests[rid] = req
+        return rid
+
+    # ---------------- internals ----------------
+
+    @property
+    def committed_tokens(self) -> int:
+        return sum(
+            self.requests[r].total_tokens
+            for r in self.active
+            if r is not None
+        )
+
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _admit_one(self) -> bool:
+        """Admit + prefill the head-of-queue request if resources allow."""
+        if not self.queue:
+            return False
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        req = self.queue[0]
+        if self.committed_tokens + req.total_tokens > self.token_budget:
+            return False
+        if not self.pool.can_admit(req.total_tokens):
+            return False
+        self.queue.popleft()
+        req._enter(RequestState.PREFILL)
+        self.pool.admit(req.rid, req.total_tokens)
+
+        p = len(req.prompt)
+        if self.cfg.family == "moe":
+            # MoE capacity routing is cross-token: padded positions compete
+            # for per-expert capacity and perturb real tokens' outputs, so
+            # prompts go through prefill unpadded (one trace per length)
+            bucket = p
+        else:
+            bucket = max(
+                self.pool.block_tokens,
+                -(-p // self.pool.block_tokens) * self.pool.block_tokens,
+            )
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :p] = req.prompt
+        logits, ks, vs = self._prefill(self.params, jnp.asarray(padded), p - 1)
+        self.pool.write_prefill(req.rid, ks[:, 0], vs[:, 0], n_tokens=p)
+        self.stats.prefill_steps += 1
+
+        first = int(self.sample(np.asarray(logits[0, :, :]))[0])
+        req.t_first_token = time.monotonic()
+        self.stats.ttfts.append(req.ttft)
+        req.output.append(first)
+        req._enter(RequestState.DECODE)
+        self.active[slot] = req.rid
+        self._token[slot, 0] = first
+        self._lengths[slot] = p
+        self._row_table[slot] = self.pool.rows_of(req.rid, pad_to=self.s_max)
+        self._table_dirty = True
+        if len(req.output) >= req.max_new_tokens:
+            self._complete(slot)
+        return True
+
+    def _complete(self, slot: int) -> None:
+        rid = self.active[slot]
+        req = self.requests[rid]
+        req._enter(RequestState.DONE)
+        self.pool.release(rid)
+        self.active[slot] = None
+        self._token[slot, 0] = 0
+        self._lengths[slot] = 0
+        self._row_table[slot] = self.pool.scratch_rows(self.s_max)
+        self._table_dirty = True
+        self.stats.completed += 1
+        self.stats.generated_tokens += len(req.output)
+
+    def _decode_step(self) -> None:
+        for i, rid in enumerate(self.active):
+            if rid is None:
+                continue
+            # room for the incoming token's KV row
+            before = self.pool.blocks_held(rid)
+            self.pool.note_tokens(rid, int(self._lengths[i]) + 1)
+            if self.pool.blocks_held(rid) != before:
+                self._row_table[i] = self.pool.rows_of(rid, pad_to=self.s_max)
+                self._table_dirty = True
+        if self._table_dirty:
+            self._row_table_dev = jnp.asarray(self._row_table)
+            self._table_dirty = False
+        logits, self.pool.k, self.pool.v = self._decode(
+            self.params,
+            jnp.asarray(self._token),
+            self.pool.k,
+            self.pool.v,
+            self._row_table_dev,
+            jnp.asarray(self._lengths),
+        )
+        self.stats.decode_steps += 1
+        nxt = self.sample(np.asarray(logits[:, 0, :])).astype(np.int32)
+        util = self.pool.stats().utilization
+        self.stats.util_samples_any.append(util)
+        if all(r is not None for r in self.active):
+            self.stats.util_samples.append(util)
+        for i, rid in enumerate(self.active):
+            if rid is None:
+                continue
+            req = self.requests[rid]
+            req.output.append(int(nxt[i]))
+            self._token[i, 0] = nxt[i]
+            self._lengths[i] += 1
+            if len(req.output) >= req.max_new_tokens:
+                self._complete(i)
+
+    # ---------------- main loop ----------------
+
+    def round(self) -> None:
+        """One scheduler round: drain admissions, then R_F decode steps."""
+        while self._admit_one():
+            pass
+        t0 = time.monotonic()
+        for _ in range(self.decode_per_round):
+            if not any(r is not None for r in self.active):
+                break
+            self._decode_step()
+        self.stats.decode_time += time.monotonic() - t0
+        self.stats.rounds += 1
+
+    def run(self, max_rounds: int | None = None) -> SchedulerStats:
+        """Drain the queue to empty and finish every in-flight request."""
+        limit = max_rounds or 64 + sum(
+            r.total_tokens for r in self.requests.values()
+        )
+        while self.queue or any(r is not None for r in self.active):
+            if self.stats.rounds >= limit:
+                raise RuntimeError(
+                    f"scheduler failed to drain: {len(self.queue)} queued, "
+                    f"{sum(r is not None for r in self.active)} active after "
+                    f"{self.stats.rounds} rounds"
+                )
+            self.round()
+        self.pool.validate()
+        return self.stats
+
+    def outputs(self) -> dict[int, list[int]]:
+        return {rid: req.output for rid, req in self.requests.items()}

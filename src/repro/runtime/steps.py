@@ -57,7 +57,9 @@ def make_train_step(
     loss = make_loss_fn(cfg, remat=remat, ce_chunk=ce_chunk)
 
     def step(params, opt_state, batch):
-        l, grads = jax.value_and_grad(loss)(params, batch)
+        # allow_int: FCMP-packed uint8 carriers are inference-only leaves;
+        # they get float0 tangents here and AdamW skips them entirely.
+        l, grads = jax.value_and_grad(loss, allow_int=True)(params, batch)
         new_params, new_state = opt.update(grads, opt_state, params)
         return new_params, new_state, {"loss": l}
 
@@ -95,5 +97,38 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
         if cfg.family == "encdec":
             return encdec_lib.decode_step(params, cfg, token, cache)
         return lm.decode_step(params, cfg, token, cache)
+
+    return step
+
+
+def make_paged_serve_step(cfg: ModelConfig) -> Callable:
+    """Pool-indexed serve step for the continuous-batching scheduler.
+
+    (params, token (B,1), pool_k, pool_v, row_table (B,S_max), lengths (B,))
+    -> (logits (B,1,V), new pool_k, new pool_v). Each decode lane gathers
+    its KV rows from the shared physical pool through ``row_table`` and
+    scatters the new token's row back — the gather/scatter analog of the
+    paper's round-robin port schedule over a packed BRAM. Jit with
+    ``donate_argnums=(2, 3)`` so the pool updates in place.
+    """
+
+    def step(params, token, pool_k, pool_v, row_table, lengths):
+        return lm.decode_step_paged(
+            params, cfg, token, pool_k, pool_v, row_table, lengths
+        )
+
+    return step
+
+
+def make_pool_prefill_step(cfg: ModelConfig) -> Callable:
+    """Batched prefill that returns the KV rows for pool insertion.
+
+    (params, tokens (B, S), last_idx ()) -> (next-token logits (B, 1, V),
+    ks, vs stacked (L, B, S, n_kv, hd)). One call fills a request's whole
+    prompt — time-to-first-token is one step, not S serve steps.
+    """
+
+    def step(params, tokens, last_idx):
+        return lm.prefill_with_cache(params, cfg, tokens, last_idx)
 
     return step

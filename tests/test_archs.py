@@ -132,3 +132,20 @@ def test_full_configs_match_assignment():
     assert get_config("moonshot_v1_16b_a3b").experts_per_token == 6
     assert get_config("zamba2_2p7b").ssm_state == 64
     assert get_config("mamba2_1p3b").ssm_state == 128
+
+
+def test_unknown_arch_raises_value_error_with_valid_ids():
+    """Unknown --arch names fail with the id list, not ModuleNotFoundError."""
+    from repro.configs import canonical
+
+    for bad in ("bogus", "llama99-9b"):
+        with pytest.raises(ValueError, match="smollm_360m"):
+            canonical(bad)
+        with pytest.raises(ValueError, match="valid archs"):
+            get_config(bad)
+        with pytest.raises(ValueError):
+            get_smoke_config(bad)
+    # aliases and accelerator ids still resolve
+    assert canonical("llama3.2-1b") == "llama3p2_1b"
+    assert canonical("cnv_w1a1") == "cnv_w1a1"
+    assert get_config("smollm-360m").name

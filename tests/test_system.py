@@ -149,3 +149,43 @@ def test_conv_as_mvau_kernel_path():
         np.asarray(got).reshape(want.shape), np.asarray(want),
         rtol=1e-4, atol=1e-4,
     )
+
+
+def test_packed_arch_train_step_excludes_carriers():
+    """ROADMAP bugfix: jax.grad over a packed (w_bits=1) arch must not
+    crash — uint8 carriers get float0 tangents (allow_int) and AdamW
+    passes them through untouched while float leaves keep training."""
+    cfg = dataclasses.replace(get_smoke_config("llama3p2_1b"), w_bits=1)
+    opt = AdamW(lr=1e-3, warmup_steps=2)
+    step = jax.jit(make_train_step(cfg, opt, remat="none", ce_chunk=16))
+    params = lm.init_params(cfg, jax.random.key(0))
+    state = opt.init(params)
+    pipe = TokenPipeline(vocab=cfg.vocab, batch=2, seq_len=32, seed=1)
+    carriers_before = np.asarray(params["layers"]["w1"]["packed"])
+    embed_before = np.asarray(params["embed"])
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    new_params, state, m = step(params, state, batch)
+    assert np.isfinite(float(m["loss"]))
+    np.testing.assert_array_equal(
+        np.asarray(new_params["layers"]["w1"]["packed"]), carriers_before
+    )
+    assert new_params["layers"]["w1"]["packed"].dtype == jnp.uint8
+    assert not np.array_equal(np.asarray(new_params["embed"]), embed_before)
+
+
+def test_train_driver_rejects_quant_on_packed_arch(capsys):
+    """`train.py --quant 1` on a packing arch exits with an actionable
+    message instead of a jax.grad traceback; unknown --arch likewise."""
+    from repro.launch import train as train_launch
+
+    rc = train_launch.main(
+        ["--arch", "llama3p2_1b", "--smoke", "--quant", "1", "--steps", "1"]
+    )
+    out = capsys.readouterr().out
+    assert rc == 2
+    assert "inference-only" in out and "quantize" in out
+
+    rc = train_launch.main(["--arch", "not_a_real_arch", "--smoke"])
+    out = capsys.readouterr().out
+    assert rc == 2
+    assert "valid archs" in out
