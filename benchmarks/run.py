@@ -14,6 +14,7 @@ import time
 from benchmarks import (
     fig2_efficiency,
     kernel_bench,
+    residency_bench,
     roofline_table,
     serve_bench,
     table1_bnn_pynq,
@@ -31,6 +32,7 @@ BENCHES = [
     ("kernel_bench (FCMP packed weights on TPU)", kernel_bench),
     ("roofline_table (40-cell dry-run)", roofline_table),
     ("serve_bench (KV-pool continuous batching vs fixed-batch)", serve_bench),
+    ("residency_bench (budgeted weight residency + §V port)", residency_bench),
 ]
 
 

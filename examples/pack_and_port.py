@@ -1,88 +1,84 @@
 """Scenario: the paper's §V porting experiments, both directions.
 
-(a) Zynq: pack CNV-W1A1 with FCMP and port it from the 7020 to the
-    smaller/cheaper 7012S with zero throughput loss (paper Table V).
-(b) Alveo: compare the two ways of fitting the binary ResNet-50 into the
-    smaller U280 — FCMP packing (32% slower) vs 2x folding (51% slower):
-    FCMP wins by ~38%.
-(c) TPU adaptation: the same trade on the v5e — FCMP-packed 1-bit weights
-    cut the weight HBM-traffic roofline term 16x; plan the VMEM residency
-    of the packed blocks (the BRAM-packing analogue).
+(a) FPGA: ``launch.port``'s device sweep answers the §V question for the
+    paper's own accelerators — CNV-W1A1 ports Zynq 7020 -> 7012S with
+    zero throughput loss once FCMP-packed (the baseline no longer fits),
+    and the binary ResNet-50 ports U250 -> U280 losing ~32% via FCMP vs
+    ~51% via 2x folding.
+(b) TPU adaptation: the same trade on the TPU tier ladder — the
+    ``runtime.residency`` planner packs a model's FFN weight blocks into
+    a VMEM budget (bin-packed into shared (8, 128) tile groups by the
+    paper's solvers) and compares serving the FCMP-packed model vs dense
+    weights per tier under a roofline decode model.
+(c) Executable plan: compile a residency plan for a smoke config and
+    show the budgeted weight set a ``--vmem-budget`` serve run executes
+    (hot blocks pinned, cold layers streamed at the GALS R_F ring depth).
 
 Run:  PYTHONPATH=src python examples/pack_and_port.py
 """
 
 import dataclasses
 
-from repro.configs import get_accelerator, get_config
-from repro.core.efficiency import baseline_report, device_utilization, report
-from repro.core.gals import GalsOperatingPoint, folding_delta_fps
-from repro.core.packing import PackItem, pack_genetic
-from repro.core.resource_model import DEVICES, TPU_V5E
-from repro.core.vmem_plan import WeightBlock, plan_vmem_residency
+from repro.configs import get_smoke_config
+from repro.launch.port import accel_port_rows, lm_port_rows
+from repro.runtime.residency import TrafficProfile, compile_residency_plan
 
 
-def zynq_port() -> None:
-    print("== (a) CNV-W1A1: Zynq 7020 -> 7012S ==")
-    acc = get_accelerator("cnv_w1a1")
-    bufs = acc.buffers()
-    base = baseline_report("base", bufs)
-    packed = report(
-        "P4", pack_genetic([PackItem(b) for b in bufs], acc.ga)
-    )
-    for dev_name in ("zynq7020", "zynq7012s"):
-        dev = DEVICES[dev_name]
-        fb = device_utilization(dev, base.brams, acc.folding.luts)
-        fp = device_utilization(
-            dev, packed.brams, acc.folding.luts + packed.lut_overhead
+def fpga_ports() -> None:
+    print("== (a) FPGA ports: the launch.port device sweep ==")
+    for arch, target in (("cnv_w1a1", "zynq7012s"), ("rn50_w2a2", "u280")):
+        rows = {r["device"]: r for r in accel_port_rows(arch)}
+        r = rows[target]
+        print(f"  {arch} -> {target}: baseline {r['baseline_brams']} BRAM "
+              f"({'fits' if r['baseline_fits'] else 'NO FIT'}), "
+              f"packed {r['packed_brams']} BRAM "
+              f"({'fits' if r['packed_fits'] else 'NO FIT'}, "
+              f"+{r['packed_lut_overhead_k']}k LUT)")
+        print(f"    delta_FPS: FCMP {r['fcmp_delta_fps_pct']}% vs "
+              f"2x folding {r['fold2_delta_fps_pct']}% -> "
+              f"recommended: {r['recommended']}")
+
+
+def tpu_ladder() -> None:
+    print("== (b) TPU tier ladder: packed vs dense serving (llama3.2-1b) ==")
+    rows = lm_port_rows("llama3p2_1b", quant=1, lanes=8)
+    for r in rows:
+        extra = (
+            f", {r['fcmp_vs_dense_speedup_pct']:+.0f}% vs dense"
+            if "fcmp_vs_dense_speedup_pct" in r else ""
         )
-        print(f"  {dev_name:10s} baseline {base.brams:4d} BRAM "
-              f"({fb['bram_pct']:5.1f}%) {'fits' if fb['fits'] else 'NO'}"
-              f"   P4 {packed.brams:4d} BRAM ({fp['bram_pct']:5.1f}%) "
-              f"{'fits' if fp['fits'] else 'NO'}")
-    op = GalsOperatingPoint(100.0, 200.0, 4, 100.0)
-    print(f"  delta_FPS at R_F=2: {100*op.delta_fps:.0f}% "
-          f"(throughput preserved: {op.throughput_preserved})")
+        print(f"  {r['device']:4s} {r['variant']:12s} "
+              f"resident {100*r['resident_fraction']:5.1f}%  "
+              f"stream {r['streamed_mib_per_step']:8.2f} MiB/step  "
+              f"{r['bound']:7s}-bound  {r['tokens_per_s']:9.1f} tok/s"
+              f"{extra}")
 
 
-def alveo_port() -> None:
-    print("== (b) RN50-W1A2: U250 -> U280, FCMP vs folding ==")
-    # FCMP path: paper's achieved clocks on U280
-    fcmp = GalsOperatingPoint(138.0, 373.0, 4, 203.0)
-    # folding path: 2x fold at ~baseline clock
-    fold_loss = 1.0 - (1.0 - folding_delta_fps(2)) * 191.0 / 195.0
-    print(f"  FCMP port:    delta_FPS = {100*fcmp.delta_fps:.0f}%")
-    print(f"  2x-fold port: delta_FPS = {100*fold_loss:.0f}%")
-    speedup = (1 - fcmp.delta_fps) / (1 - fold_loss) - 1
-    print(f"  -> FCMP is {100*speedup:.0f}% faster than folding (paper: 38%)")
-
-
-def tpu_adaptation() -> None:
-    print("== (c) TPU v5e: packed weights + VMEM residency plan ==")
-    cfg = get_config("olmoe_1b_7b")
-    tp = 16
-    # per-device expert FFN blocks (E/tp experts per device, 3 mats each)
-    blocks = []
-    for e in range(cfg.n_experts // tp):
-        for mat, (k, n) in {
-            "w1": (cfg.d_model, cfg.d_ff),
-            "w3": (cfg.d_model, cfg.d_ff),
-            "w2": (cfg.d_ff, cfg.d_model),
-        }.items():
-            blocks.append(WeightBlock(f"e{e}_{mat}", k, n, bits_per_weight=1))
-    dense_bytes = sum(b.rows * b.cols * 2 for b in blocks)  # bf16
-    packed_bytes = sum(b.padded_bytes(TPU_V5E) for b in blocks)
-    print(f"  {len(blocks)} expert-FFN blocks/device: bf16 "
-          f"{dense_bytes/2**20:.0f} MiB -> packed 1-bit "
-          f"{packed_bytes/2**20:.1f} MiB ({dense_bytes/packed_bytes:.1f}x)")
-    plan = plan_vmem_residency(blocks, TPU_V5E.vmem_bytes, reserve_frac=0.5)
-    print(f"  VMEM residency: {sum(plan.resident)}/{len(blocks)} blocks "
-          f"pinned ({plan.resident_bytes/2**20:.1f} MiB of "
-          f"{TPU_V5E.vmem_bytes//2**21} MiB budget), HBM re-stream traffic "
-          f"cut {100*plan.hbm_traffic_reduction:.0f}%")
+def executable_plan() -> None:
+    print("== (c) A compiled, executable residency plan (smoke config) ==")
+    cfg = dataclasses.replace(get_smoke_config("smollm_360m"), w_bits=1)
+    total = sum(
+        b.padded_bytes()
+        for b in compile_residency_plan(
+            cfg, vmem_budget_bytes=0, traffic=TrafficProfile(lanes=2)
+        ).blocks
+    )
+    plan = compile_residency_plan(
+        cfg,
+        vmem_budget_bytes=total // 2,
+        traffic=TrafficProfile(lanes=2, prompt_len=16, gen_len=16),
+    )
+    s = plan.summary()
+    mask = plan.layer_stream_mask(cfg)
+    print(f"  {s['resident_blocks']}/{s['n_blocks']} blocks pinned in "
+          f"{s['vmem_budget_mib']} MiB, HBM re-stream traffic cut "
+          f"{100*s['hbm_traffic_reduction']:.0f}%")
+    print(f"  layer stream mask {mask} at ring depth {s['stream_ahead']} "
+          f"(R_F) — the set `serve --vmem-budget` decodes against, "
+          "token-identical to the unbudgeted path")
 
 
 if __name__ == "__main__":
-    zynq_port()
-    alveo_port()
-    tpu_adaptation()
+    fpga_ports()
+    tpu_ladder()
+    executable_plan()

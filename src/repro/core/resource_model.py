@@ -143,6 +143,38 @@ class TpuChip:
 
 TPU_V5E = TpuChip()
 
+# The TPU porting ladder (the paper's §V question, one level up the
+# hierarchy): can a model + traffic profile be ported from a bigger chip
+# to a smaller/cheaper tier, and at what throughput loss? VMEM is the
+# fixed-size "OCM" every tier shares; the tiers differ in HBM bandwidth
+# and peak compute, so a port that streams more weight bytes per step
+# (smaller resident set) degrades exactly where hbm_bw is scarce.
+TPU_V4 = TpuChip(
+    name="tpu_v4",
+    peak_bf16_flops=275e12,
+    hbm_bytes=32 * 1024**3,
+    hbm_bw=1228e9,
+    vmem_bytes=128 * 1024**2,
+    ici_bw_per_link=50e9,
+    ici_links=6,
+)
+TPU_V5P = TpuChip(
+    name="tpu_v5p",
+    peak_bf16_flops=459e12,
+    hbm_bytes=95 * 1024**3,
+    hbm_bw=2765e9,
+    vmem_bytes=128 * 1024**2,
+    ici_bw_per_link=90e9,
+    ici_links=6,
+)
+# Ordered small -> large by (hbm_bw, flops): the porting sweep walks this
+# ladder the way the paper walks 7020 -> 7012S / U250 -> U280.
+TPU_TIERS: dict[str, TpuChip] = {
+    "v5e": TPU_V5E,
+    "v4": TPU_V4,
+    "v5p": TPU_V5P,
+}
+
 
 # --------------------------------------------------------------------------
 # FCMP LUT-overhead model

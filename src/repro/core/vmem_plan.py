@@ -108,3 +108,67 @@ def blocks_from_buffers(
         WeightBlock(b.name, *rows_of[b.name], bits_per_weight=b.w_bits)
         for b in buffers
     ]
+
+
+# --------------------------------------------------------------------------
+# core.packing bridge: VMEM tiles as a RamPrimitive
+# --------------------------------------------------------------------------
+
+
+def vmem_tile_ram(chip: TpuChip = TPU_V5E) -> RamPrimitive:
+    """One (sublane, lane) VMEM tile of the int8 carrier as a RAM primitive.
+
+    A carrier column is ``lane`` bytes wide (8 bits each) and a tile holds
+    ``sublane`` carrier rows, so ``blocks_for(cols*8, carrier_rows)`` equals
+    ``chip.tile_blocks_for(carrier_rows, cols)`` exactly — the bridge that
+    lets the paper's bin-packing solvers run over TPU weight blocks.
+    """
+    return RamPrimitive(
+        name=f"VMEM_TILE_{chip.name}",
+        capacity_bits=chip.sublane * chip.lane * 8,
+        n_ports=2,
+        configs=((chip.lane * 8, chip.sublane),),
+    )
+
+
+def block_item(
+    block: WeightBlock, chip: TpuChip = TPU_V5E, region: str = ""
+) -> PackItem:
+    """A WeightBlock's packed int8 carrier as a packable buffer.
+
+    width = cols * 8 bits (one carrier byte per output channel),
+    depth = carrier rows (= ceil(rows * bits / 8)).
+    """
+    carrier_rows = math.ceil(block.rows * block.bits_per_weight / 8)
+    buf = WeightBuffer(
+        block.name,
+        width_bits=block.cols * 8,
+        depth_words=carrier_rows,
+        w_bits=block.bits_per_weight,
+    )
+    return PackItem(buf, region=region)
+
+
+def pack_blocks(
+    blocks: Sequence[WeightBlock],
+    *,
+    chip: TpuChip = TPU_V5E,
+    max_height: int = 4,
+    solver: str = "ffd",
+    regions: Sequence[str] | None = None,
+) -> Packing:
+    """Bin-pack weight-block carriers into shared VMEM tile groups.
+
+    Co-locating oddly-shaped blocks in one tile bin recovers the (8, 128)
+    padding waste the same way FCMP recovers BRAM aspect-ratio waste —
+    ``Packing.total_blocks`` is the tile count of the packed layout, and
+    ``Packing.efficiency`` is paper Eq. 1 over VMEM tiles.
+    """
+    from repro.core.packing import SOLVERS
+
+    items = [
+        block_item(b, chip, region=(regions[i] if regions else ""))
+        for i, b in enumerate(blocks)
+    ]
+    ram = vmem_tile_ram(chip)
+    return SOLVERS[solver](items, max_height, ram)

@@ -72,6 +72,57 @@ def packed_matmul(
     return out[:m, :n].reshape(*lead, n)
 
 
+def stream_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray | None = None,
+    *,
+    bits: int = 0,
+    k: int,
+    stream_depth: int = 2,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Batched HBM-streaming matmul (``kernels.weight_stream``); pads to
+    block multiples.
+
+    x: (..., K); w: (K*bits/8, N) packed carrier or (K, N) dense (bits=0);
+    scale: (N,) or None. Returns (..., N) f32. On CPU the jnp reference is
+    used directly: interpret-mode DMA emulation is exercised by the kernel
+    equivalence tests, while hot paths (the budgeted serve step) keep the
+    reference math — bit-identical to the resident weight path, so a
+    VMEM-budgeted decode produces token-identical output.
+    """
+    from repro.kernels import weight_stream as _ws
+    from repro.kernels.ref import stream_matmul_ref
+
+    if interpret is None:
+        interpret = _on_cpu()
+    per = 8 // bits if bits else 1
+    lead = x.shape[:-1]
+    m = int(np.prod(lead)) if lead else 1
+    n = w.shape[1]
+    x2 = x.reshape(m, k)
+    if scale is None:
+        scale = jnp.ones((n,), jnp.float32)
+    if interpret:
+        out = stream_matmul_ref(x2, w, scale, bits, k)
+        return out[:m].reshape(*lead, n)
+    bn = min(128, _round_up(n, 128))
+    ck = min(512, _round_up(k, max(256, per * 8)))
+    mp, np_, kp = _round_up(m, 8), _round_up(n, bn), _round_up(k, ck)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    # K padding: packed carriers pad with code 0; x is zero-padded along K
+    # so binary's missing 0 code is still an exact no-op (see packed_matmul)
+    wp = jnp.pad(w, ((0, (kp - k) // per), (0, np_ - n)))
+    sp = jnp.pad(scale, (0, np_ - n))
+    out = _ws.stream_matmul(
+        x2, wp, sp,
+        bits=bits, k=kp, bn=bn, ck=ck, stream_depth=stream_depth,
+        interpret=False,
+    )
+    return out[:m, :n].reshape(*lead, n)
+
+
 def mvau(
     x: jnp.ndarray,
     packed_w: jnp.ndarray,

@@ -37,6 +37,34 @@ def packed_matmul_ref(
     return out * scale[None, :]
 
 
+def stream_matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    scale: jnp.ndarray,
+    bits: int,
+    k: int,
+) -> jnp.ndarray:
+    """Oracle for ``weight_stream.stream_matmul``.
+
+    The streaming kernel's math is chunked accumulation of the same
+    product; the oracle materialises the decoded weight once and does a
+    single f32 matmul — identical math to the resident (non-streamed)
+    ``lm.packed_dense`` / ``layers.dense`` paths, which is what makes the
+    budgeted and unbudgeted serve paths token-identical on CPU.
+
+    x: (M, K); w: (K*bits/8, N) uint8 carrier, or (K, N) dense if bits=0;
+    scale: (N,).
+    """
+    if bits == 0:
+        vals = w.astype(jnp.float32)
+    else:
+        vals = decode_weights(w, bits, k)
+    out = jnp.dot(
+        x.astype(jnp.float32), vals, preferred_element_type=jnp.float32
+    )
+    return out * scale[None, :]
+
+
 def mvau_ref(
     x: jnp.ndarray,
     packed_w: jnp.ndarray,

@@ -17,6 +17,7 @@ Usage::
 """
 
 import argparse
+import dataclasses
 import functools
 import time
 
@@ -26,7 +27,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import lm
-from repro.models.config import ATTN_KV_FAMILIES
+from repro.models.config import ATTN_KV_FAMILIES, PACKING_FAMILIES
 from repro.runtime.kv_pool import KVPool, choose_block_tokens
 from repro.runtime.scheduler import Scheduler
 from repro.runtime.steps import make_serve_step
@@ -38,6 +39,28 @@ def make_requests(args, vocab: int) -> list[np.ndarray]:
         rng.integers(0, vocab, size=(args.prompt_len,)).astype(np.int32)
         for _ in range(args.requests)
     ]
+
+
+def build_residency_plan(cfg, args):
+    """Compile the ``--vmem-budget`` residency plan (None when unbudgeted)."""
+    if not args.vmem_budget:
+        return None
+    from repro.runtime.residency import TrafficProfile, compile_residency_plan
+    from repro.runtime.residency.executor import supports_budgeted_decode
+
+    if not supports_budgeted_decode(cfg):
+        raise ValueError(
+            f"--vmem-budget needs a dense-FFN attention family; "
+            f"{cfg.name} is {cfg.family!r}"
+        )
+    traffic = TrafficProfile(
+        lanes=args.batch, prompt_len=args.prompt_len, gen_len=args.gen_len
+    )
+    return compile_residency_plan(
+        cfg,
+        vmem_budget_bytes=int(args.vmem_budget * 2**20),
+        traffic=traffic,
+    )
 
 
 def build_pool_engine(cfg, params, args) -> Scheduler:
@@ -56,6 +79,14 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
         max_len=args.max_len,
         token_budget=args.token_budget or None,
         decode_per_round=args.rf or None,
+        sampling=lm.SamplingParams(
+            temperature=args.temperature,
+            top_k=args.top_k,
+            top_p=args.top_p,
+            seed=args.seed,
+        ),
+        prefill_chunk=args.prefill_chunk or None,
+        residency=build_residency_plan(cfg, args),
     )
 
 
@@ -86,6 +117,9 @@ def run_pool_engine(cfg, params, args) -> dict:
         "mean_ttft_s": stats.mean_ttft,
         "pool_utilization": stats.steady_state_utilization,
         "block_tokens": sched.pool.block_tokens,
+        "residency": (
+            sched.residency.summary() if sched.residency is not None else None
+        ),
         "outputs": outputs,
     }
 
@@ -203,6 +237,22 @@ def build_parser() -> argparse.ArgumentParser:
                     help="decode steps per admission round; 0 = Eq. 2 default")
     ap.add_argument("--token-budget", type=int, default=0,
                     help="admission token budget; 0 = pool capacity")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill chunk size for long prompts; "
+                         "0 = the admission token budget")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the top-k logits; 0 = off")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass; 1.0 = off")
+    ap.add_argument("--quant", type=int, default=0, choices=[0, 1, 2],
+                    help="serve with FCMP-packed 1/2-bit FFN weights "
+                         "(inference-only carriers)")
+    ap.add_argument("--vmem-budget", type=float, default=0.0,
+                    help="MiB of VMEM for pinned weight blocks; decode "
+                         "runs against the budgeted set, cold blocks "
+                         "stream HBM->VMEM (0 = unbudgeted)")
     return ap
 
 
@@ -216,11 +266,23 @@ def main(argv=None) -> int:
     if cfg.family == "encdec":
         print("[serve] encdec serving is exercised in tests; use an LM arch")
         return 0
+    if args.quant:
+        if cfg.family not in PACKING_FAMILIES:
+            print(f"[serve] note: --quant has no effect on family "
+                  f"{cfg.family!r} (no dense FFN to pack)")
+        else:
+            cfg = dataclasses.replace(cfg, w_bits=args.quant)
     engine = args.engine
     if engine == "pool" and cfg.family not in ATTN_KV_FAMILIES:
         print(f"[serve] family {cfg.family!r} keeps fixed-size per-slot "
               "decode state; using the fixed-batch engine")
         engine = "fixed"
+    if args.vmem_budget and engine == "fixed":
+        # the fixed loop has no budgeted decode path; failing loudly beats
+        # reporting numbers the user would read as budgeted
+        print(f"[serve] --vmem-budget needs the pool engine's paged decode; "
+              f"family {cfg.family!r} / --engine fixed cannot run budgeted")
+        return 2
 
     params = lm.init_params(cfg, jax.random.key(args.seed))
     run = run_pool_engine if engine == "pool" else run_fixed_engine
@@ -240,6 +302,15 @@ def main(argv=None) -> int:
     if m["engine"] == "pool":
         line += f", pool utilization {m['pool_utilization']*100:.1f}%"
     print(line)
+    if m.get("residency"):
+        r = m["residency"]
+        print(
+            f"[serve/residency] {r['resident_blocks']}/{r['n_blocks']} "
+            f"weight blocks pinned ({r['resident_mib']:.2f} MiB of "
+            f"{r['vmem_budget_mib']:.2f} MiB budget), HBM re-stream "
+            f"traffic cut {r['hbm_traffic_reduction']*100:.0f}%, "
+            f"stream-ahead depth {r['stream_ahead']} (R_F)"
+        )
     return 0
 
 

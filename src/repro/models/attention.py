@@ -191,6 +191,44 @@ def decode_attention(
     return out.reshape(b, 1, hq, d).astype(q.dtype)
 
 
+def chunk_attention(
+    q: jnp.ndarray,
+    k_rows: jnp.ndarray,
+    v_rows: jnp.ndarray,
+    q_pos: jnp.ndarray,
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Multi-token causal attention against gathered pool rows.
+
+    ``decode_attention`` generalised to a C-token query chunk (the chunked
+    prefill path): q: (B, C, Hq, D); k_rows/v_rows: (B, S, Hkv, D) rows
+    gathered from the KV pool in logical order (row i holds position i);
+    q_pos: (B, C) absolute positions of the chunk tokens. Rows beyond the
+    chunk (scratch padding included) are masked by causality; ``q_pos``
+    may be traced, so one trace serves every chunk offset.
+    """
+    b, c, hq, d = q.shape
+    _, s, hkv, _ = k_rows.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, c, hkv, g, d)
+    scores = jnp.einsum(
+        "bqhgd,bshd->bhgqs", qg, k_rows, preferred_element_type=jnp.float32
+    ) * scale
+    k_pos = jnp.arange(s)
+    valid = q_pos[:, :, None] >= k_pos[None, None, :]  # (B, C, S)
+    if window > 0:
+        valid &= q_pos[:, :, None] - k_pos[None, None, :] < window
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgqs,bshd->bqhgd", p.astype(v_rows.dtype), v_rows,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, c, hq, d).astype(q.dtype)
+
+
 def cache_insert(
     cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray
 ) -> jnp.ndarray:

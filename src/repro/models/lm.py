@@ -108,6 +108,30 @@ def packed_swiglu(x, w1, w3, w2, bits: int):
     return packed_dense(h, w2, bits)
 
 
+def _streamed_matmul(x: jnp.ndarray, w: Any, bits: int, depth: int):
+    """Matmul with the weight left in HBM and streamed through a VMEM ring
+    (``kernels.weight_stream``; the jnp reference on CPU — same math as
+    the resident path, so budgeted decode stays token-identical)."""
+    from repro.kernels.ops import stream_matmul
+
+    kdim = x.shape[-1]
+    if isinstance(w, dict):
+        out = stream_matmul(
+            x, w["packed"], w["scale"], bits=bits, k=kdim, stream_depth=depth
+        )
+    else:
+        out = stream_matmul(x, w, None, bits=0, k=kdim, stream_depth=depth)
+    return out.astype(x.dtype)
+
+
+def streamed_swiglu(x, w1, w3, w2, bits: int, depth: int):
+    """The FFN of a non-resident layer: every mat streamed HBM->VMEM."""
+    h = jax.nn.silu(_streamed_matmul(x, w1, bits, depth)) * _streamed_matmul(
+        x, w3, bits, depth
+    )
+    return _streamed_matmul(h, w2, bits, depth)
+
+
 # --------------------------------------------------------------------------
 # Parameter initialisation
 # --------------------------------------------------------------------------
@@ -292,15 +316,25 @@ def _attn_shard(t):
     return jax.lax.with_sharding_constraint(t, spec)
 
 
-def _attn_block(lp, cfg: ModelConfig, x, positions, *, causal=True, window=0):
-    """Full-sequence attention sub-block (pre-norm residual)."""
-    b, s, d = x.shape
+def _qkv(lp, cfg: ModelConfig, x, positions):
+    """Pre-norm q/k/v projection + RoPE shared by EVERY attention path
+    (full-sequence, chunked prefill, and via ``_decode_qkv`` the one-token
+    decode paths); x: (B, S, d), positions: (B|1, S). Keeping this single
+    is what keeps all paths numerically equal."""
+    b, s, _ = x.shape
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     q = dense(h, lp["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
     k = dense(h, lp["wk"]).reshape(b, s, cfg.n_kv, cfg.hd)
     v = dense(h, lp["wv"]).reshape(b, s, cfg.n_kv, cfg.hd)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_block(lp, cfg: ModelConfig, x, positions, *, causal=True, window=0):
+    """Full-sequence attention sub-block (pre-norm residual)."""
+    b, s, d = x.shape
+    q, k, v = _qkv(lp, cfg, x, positions)
     seq_mesh = _ATTN_SEQ_SHARD["mesh"]
     if (
         seq_mesh is not None
@@ -328,6 +362,14 @@ def _ffn_block(lp, cfg: ModelConfig, x, ln_name="ln2"):
         y = packed_swiglu(h, lp["w1"], lp["w3"], lp["w2"], cfg.w_bits)
     else:
         y = swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+    return x + y, jnp.zeros((), jnp.float32)
+
+
+def _ffn_block_streamed(lp, cfg: ModelConfig, x, depth: int):
+    """`_ffn_block` for a layer the residency plan left in HBM: same
+    pre-norm residual shape, weights streamed (dense-FFN families only)."""
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y = streamed_swiglu(h, lp["w1"], lp["w3"], lp["w2"], cfg.w_bits, depth)
     return x + y, jnp.zeros((), jnp.float32)
 
 
@@ -553,17 +595,10 @@ def set_decode_split_d(mesh, axis: str = "model",
 
 
 def _decode_qkv(lp, cfg, x, pos_b):
-    """Shared one-token q/k/v projection + RoPE for every decode path
-    (per-slot ring and pool-indexed paged); ``pos_b`` is (B, 1) positions.
-    Keeping this single keeps the paged and ring paths numerically equal."""
-    b = x.shape[0]
-    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
-    q = dense(h, lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
-    k = dense(h, lp["wk"]).reshape(b, 1, cfg.n_kv, cfg.hd)
-    v = dense(h, lp["wv"]).reshape(b, 1, cfg.n_kv, cfg.hd)
-    q = apply_rope(q, pos_b, cfg.rope_theta)
-    k = apply_rope(k, pos_b, cfg.rope_theta)
-    return q, k, v
+    """One-token q/k/v for the decode paths (per-slot ring and
+    pool-indexed paged); ``pos_b`` is (B, 1) positions. Delegates to the
+    shared ``_qkv`` so every path stays numerically equal."""
+    return _qkv(lp, cfg, x, pos_b)
 
 
 def _decode_attn_block(lp, cfg, x, k_cache, v_cache, pos, *, window=0):
@@ -735,6 +770,9 @@ def decode_step_paged(
     pool_v: jnp.ndarray,
     row_table: jnp.ndarray,
     lengths: jnp.ndarray,
+    *,
+    stream_mask: jnp.ndarray | None = None,
+    stream_depth: int = 2,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One serving step against a shared row-addressed KV pool.
 
@@ -746,10 +784,18 @@ def decode_step_paged(
     its gathered rows with per-lane positions (no lockstep shared length —
     lanes at different depths coexist in one batched step).
 
+    ``stream_mask`` (L,) bool turns on the budgeted weight-residency path
+    (``runtime.residency``): layers flagged True run their FFN through the
+    HBM->VMEM weight streamer with ring depth ``stream_depth`` instead of
+    the resident in-VMEM matmul — the mask is scanned with the layer
+    leaves so the model still compiles as one scan.
+
     Returns (logits (B, 1, V), new pool_k, new pool_v).
     """
     if cfg.family not in ATTN_KV_FAMILIES:
         raise ValueError(f"decode_step_paged: unsupported family {cfg.family}")
+    if stream_mask is not None and cfg.family == "moe":
+        raise ValueError("budgeted decode does not cover moe expert FFNs")
     x = embed(token, params["embed"], _dt(cfg))
     b = x.shape[0]
     s_max = row_table.shape[1]
@@ -760,7 +806,10 @@ def decode_step_paged(
 
     def layer_fn(carry, lp_kv):
         x, aux = carry
-        lp, pk, pv = lp_kv  # pk/pv: (R, n_kv, hd) one layer's pool
+        if stream_mask is None:
+            lp, pk, pv = lp_kv  # pk/pv: (R, n_kv, hd) one layer's pool
+        else:
+            lp, pk, pv, streamed = lp_kv
         q, k, v = _decode_qkv(lp, cfg, x, pos_b)
         pk = pk.at[write_rows].set(k[:, 0])
         pv = pv.at[write_rows].set(v[:, 0])
@@ -769,6 +818,80 @@ def decode_step_paged(
             window=cfg.sliding_window,
         )
         x = x + dense(o.reshape(b, 1, -1), lp["wo"])
+        if stream_mask is None:
+            x, a = _ffn_block(lp, cfg, x)
+        else:
+            x, a = jax.lax.cond(
+                streamed,
+                lambda h: _ffn_block_streamed(lp, cfg, h, stream_depth),
+                lambda h: _ffn_block(lp, cfg, h),
+                x,
+            )
+        return (x, aux + a), (pk, pv)
+
+    xs = (params["layers"], pool_k, pool_v)
+    if stream_mask is not None:
+        xs = xs + (stream_mask,)
+    (x, _), (pks, pvs) = jax.lax.scan(
+        layer_fn, (x, jnp.zeros((), jnp.float32)), xs
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x, table, cfg.vocab), pks, pvs
+
+
+def prefill_chunk_paged(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    row_table: jnp.ndarray,
+    write_rows: jnp.ndarray,
+    start: jnp.ndarray,
+    last_idx: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill one chunk of a prompt against the shared KV pool.
+
+    Chunked prefill (ROADMAP): a prompt longer than the scheduler's
+    admission token budget is split across rounds instead of monopolizing
+    one round with a single huge prefill step. Each chunk attends over the
+    request's *already-pooled* prefix (gathered through ``row_table``)
+    plus itself, causally — flash attention with ``q_offset = start`` —
+    and scatters its own K/V rows into the pool.
+
+    tokens: (B, C) chunk tokens, right-padded; write_rows: (B, C) physical
+    pool row per chunk token (scratch row for padding); row_table:
+    (B, S_max) the request's full row table; start: () position of the
+    chunk's first token; last_idx: () in-chunk index of the prompt's last
+    token (only meaningful on the final chunk). Attention-KV families
+    only, and MoE is excluded: its capacity routing is cross-token, so
+    chunking would perturb real tokens' outputs (the scheduler keeps MoE
+    prompts single-shot).
+
+    Returns (logits at last_idx (B, 1, V), new pool_k, new pool_v).
+    """
+    if cfg.family not in ATTN_KV_FAMILIES or cfg.family == "moe":
+        raise ValueError(
+            f"prefill_chunk_paged: unsupported family {cfg.family}"
+        )
+    x = embed(tokens, params["embed"], _dt(cfg))
+    b, c, _ = x.shape
+    positions = start + jnp.arange(c)[None, :]  # (1, C) broadcast over B
+
+    def layer_fn(carry, lp_kv):
+        x, aux = carry
+        lp, pk, pv = lp_kv
+        q, k, v = _qkv(lp, cfg, x, positions)
+        pk = pk.at[write_rows].set(k)
+        pv = pv.at[write_rows].set(v)
+        # gathered rows sit at logical positions 0..S_max-1; rows past the
+        # chunk (scratch padding included) are masked by causality
+        o = attn.chunk_attention(
+            q, pk[row_table], pv[row_table], positions,
+            window=cfg.sliding_window,
+        )
+        x = x + dense(o.reshape(b, c, -1), lp["wo"])
         x, a = _ffn_block(lp, cfg, x)
         return (x, aux + a), (pk, pv)
 
@@ -778,5 +901,66 @@ def decode_step_paged(
         (params["layers"], pool_k, pool_v),
     )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    return unembed_logits(x, table, cfg.vocab), pks, pvs
+    return unembed_logits(x_last, table, cfg.vocab), pks, pvs
+
+
+# --------------------------------------------------------------------------
+# Sampling (host-side: the scheduler samples from materialised logits)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Decode sampling policy. ``temperature == 0`` is exact greedy (the
+    default and the special case every equivalence test pins); top-k and
+    top-p restrict the support *before* renormalising. Seed-determinism
+    is the scheduler's contract: it draws from an rng keyed on
+    (seed, request id, position), so a request's output is independent of
+    lane placement and co-resident requests."""
+
+    temperature: float = 0.0
+    top_k: int = 0  # 0 = unrestricted
+    top_p: float = 1.0  # 1.0 = unrestricted
+    seed: int = 0
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sample_logits(
+    row,
+    sp: SamplingParams,
+    rng=None,
+) -> int:
+    """Draw one token from a (V,) numpy logits row under ``sp``.
+
+    Greedy (temperature 0) never touches ``rng`` (it may be None); top_k=1
+    collapses to greedy regardless of temperature; top_k >= V is
+    unrestricted.
+    """
+    import numpy as np
+
+    row = np.asarray(row, np.float64)
+    if sp.is_greedy or sp.top_k == 1:
+        return int(np.argmax(row))
+    logits = row / sp.temperature
+    top_k = min(sp.top_k, len(row))
+    if top_k > 0:
+        kth = np.partition(logits, -top_k)[-top_k]
+        logits = np.where(logits >= kth, logits, -np.inf)
+    logits = logits - np.max(logits)
+    probs = np.exp(logits)
+    probs /= probs.sum()
+    if sp.top_p < 1.0:
+        order = np.argsort(-probs)
+        csum = np.cumsum(probs[order])
+        # smallest prefix whose mass reaches top_p (>= 1 token)
+        cut = int(np.searchsorted(csum, sp.top_p)) + 1
+        mask = np.zeros_like(probs, bool)
+        mask[order[:cut]] = True
+        probs = np.where(mask, probs, 0.0)
+        probs /= probs.sum()
+    return int(rng.choice(len(probs), p=probs))

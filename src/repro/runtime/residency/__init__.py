@@ -1,0 +1,27 @@
+"""Budgeted weight-residency runtime (the executed VMEM analogue of FCMP).
+
+``plan`` compiles a :class:`RuntimeResidencyPlan` from (model config x
+device VMEM budget x traffic profile) with the ``core.packing`` solvers
+running over ``core.vmem_plan.WeightBlock`` carriers; ``executor`` threads
+the plan into the paged serve step so hot blocks stay pinned in VMEM and
+cold blocks are double-buffer-streamed HBM->VMEM by
+``kernels.weight_stream``.
+"""
+
+from repro.runtime.residency.plan import (
+    RuntimeResidencyPlan,
+    TrafficProfile,
+    compile_residency_plan,
+    stream_ahead_depth,
+    weight_blocks,
+)
+from repro.runtime.residency.executor import make_budgeted_paged_serve_step
+
+__all__ = [
+    "RuntimeResidencyPlan",
+    "TrafficProfile",
+    "compile_residency_plan",
+    "stream_ahead_depth",
+    "weight_blocks",
+    "make_budgeted_paged_serve_step",
+]

@@ -1,0 +1,62 @@
+"""Execute a residency plan: budgeted paged decode over a split weight set.
+
+The plan's ``layer_stream_mask`` partitions layers into *resident* (FFN
+weights pinned — the standard in-VMEM matmul path) and *streamed* (FFN
+weights pulled HBM->VMEM per step by ``kernels.weight_stream``, ring depth
+= the plan's ``stream_ahead``, i.e. the GALS R_F). The mask is scanned
+alongside the stacked layer leaves so the whole model still compiles as
+one ``lax.scan`` — HLO size stays flat in depth, and a ``lax.cond``
+selects the path per layer at run time.
+
+Numerics: on CPU the streamed branch resolves to the ``kernels.ref``
+oracle, whose math is identical to the resident branch — which is what
+makes ``--vmem-budget`` serve output token-identical to the unbudgeted
+path (the acceptance gate). On TPU the Pallas streaming kernel runs and
+matches to matmul-accumulation tolerance.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+from repro.models.config import ModelConfig
+from repro.runtime.residency.plan import RuntimeResidencyPlan
+
+
+def supports_budgeted_decode(cfg: ModelConfig) -> bool:
+    """Budgeted decode = paged decode + a streamable dense FFN."""
+    return cfg.family in ("dense", "vlm")
+
+
+def make_budgeted_paged_serve_step(
+    cfg: ModelConfig, plan: RuntimeResidencyPlan
+) -> Callable:
+    """Pool-indexed serve step running against the plan's budgeted set.
+
+    Same signature as ``steps.make_paged_serve_step``: (params, token,
+    pool_k, pool_v, row_table, lengths) -> (logits, pool_k, pool_v).
+    """
+    if not supports_budgeted_decode(cfg):
+        raise ValueError(
+            f"budgeted decode needs a dense-FFN attention family; "
+            f"got {cfg.family!r} (moe expert streaming and ssm/hybrid "
+            "state are out of the residency executor's scope)"
+        )
+    mask = plan.layer_stream_mask(cfg)
+    assert len(mask) == cfg.n_layers, (len(mask), cfg.n_layers)
+    from repro.runtime.steps import make_budgeted_paged_serve_step as _mk
+
+    return _mk(cfg, mask, plan.stream_ahead)
+
+
+@functools.lru_cache(maxsize=None)
+def cached_budgeted_step(cfg: ModelConfig, plan: RuntimeResidencyPlan):
+    """jit-compiled budgeted step, cached per (config, plan) so schedulers
+    and benchmark A/B runs share compilations (mirrors
+    ``scheduler._jitted_decode``)."""
+    import jax
+
+    return jax.jit(
+        make_budgeted_paged_serve_step(cfg, plan), donate_argnums=(2, 3)
+    )

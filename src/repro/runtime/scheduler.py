@@ -35,8 +35,13 @@ import numpy as np
 
 from repro.core.gals import required_rf
 from repro.models.config import ModelConfig
+from repro.models.lm import SamplingParams, sample_logits
 from repro.runtime.kv_pool import KVPool
-from repro.runtime.steps import make_paged_serve_step, make_pool_prefill_step
+from repro.runtime.steps import (
+    make_chunk_prefill_step,
+    make_paged_serve_step,
+    make_pool_prefill_step,
+)
 
 
 # jit wrappers cached per config so schedulers (and benchmark A/B runs)
@@ -49,6 +54,11 @@ def _jitted_prefill(cfg: ModelConfig):
 @functools.lru_cache(maxsize=None)
 def _jitted_decode(cfg: ModelConfig):
     return jax.jit(make_paged_serve_step(cfg), donate_argnums=(2, 3))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_chunk_prefill(cfg: ModelConfig):
+    return jax.jit(make_chunk_prefill_step(cfg), donate_argnums=(2, 3))
 
 
 class RequestState(enum.Enum):
@@ -122,6 +132,9 @@ class Scheduler:
         token_budget: int | None = None,
         decode_per_round: int | None = None,
         sample: Callable[[np.ndarray], np.ndarray] | None = None,
+        sampling: SamplingParams | None = None,
+        prefill_chunk: int | None = None,
+        residency=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -135,9 +148,25 @@ class Scheduler:
         self.decode_per_round = decode_per_round or max(
             1, math.ceil(required_rf(slots))
         )
-        self.sample = sample or (lambda lg: np.argmax(lg, axis=-1))
+        # ``sample`` (a batched (B, V) -> (B,) callable) overrides the
+        # seed-deterministic per-request sampler; default greedy either way
+        self.sample = sample
+        self.sampling = sampling or SamplingParams()
+        # admission compute budget per prefill chunk: prompts longer than
+        # this are split across rounds instead of monopolizing one round
+        self.prefill_chunk = min(
+            prefill_chunk or self.token_budget, self.token_budget
+        )
+        self.residency = residency
         self._prefill = _jitted_prefill(cfg)
-        self._decode = _jitted_decode(cfg)
+        self._chunk_prefill = _jitted_chunk_prefill(cfg)
+        if residency is not None:
+            from repro.runtime.residency.executor import cached_budgeted_step
+
+            self._decode = cached_budgeted_step(cfg, residency)
+        else:
+            self._decode = _jitted_decode(cfg)
+        self._chunk_cursor: dict[int, int] = {}
         self.queue: deque[Request] = deque()
         self.requests: dict[int, Request] = {}
         self.active: list[int | None] = [None] * slots
@@ -155,17 +184,27 @@ class Scheduler:
     # ---------------- submission ----------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        total = len(prompt) + max_new_tokens
         if len(prompt) < 1 or max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens >= 1")
-        if len(prompt) + max_new_tokens > self.max_len:
+        if total > self.max_len:
             raise ValueError(
-                f"request needs {len(prompt) + max_new_tokens} tokens "
-                f"> max_len {self.max_len}"
+                f"request needs {total} tokens > max_len {self.max_len}"
             )
-        if len(prompt) + max_new_tokens > self.token_budget:
+        usable = self.pool.usable_blocks * self.pool.block_tokens
+        if total > usable:
             raise ValueError(
-                f"request needs {len(prompt) + max_new_tokens} tokens "
-                f"> token budget {self.token_budget}"
+                f"request needs {total} tokens > pool capacity {usable}"
+            )
+        # prompts over the admission token budget are legal for chunkable
+        # families: they admit solo and prefill in budget-sized chunks
+        # across rounds. MoE prompts must prefill in one unpadded shot
+        # (cross-token capacity routing), so the budget stays a hard cap.
+        if total > self.token_budget and self.cfg.family == "moe":
+            raise ValueError(
+                f"request needs {total} tokens > token budget "
+                f"{self.token_budget} (moe prompts cannot chunk: capacity "
+                "routing is cross-token)"
             )
         rid = self._next_rid
         self._next_rid += 1
@@ -192,23 +231,72 @@ class Scheduler:
                 return i
         return None
 
+    # ---------------- sampling ----------------
+
+    def _sample_one(self, req: Request, row: np.ndarray) -> int:
+        """Next token for one request from its (V,) logits row.
+
+        Seed-deterministic: the rng is keyed on (seed, rid, position), so
+        a request's output never depends on lane placement or co-resident
+        requests (the staggered-lane invariant extends to sampling).
+        """
+        if self.sample is not None:  # legacy batched override
+            return int(self.sample(row[None, :])[0])
+        sp = self.sampling
+        rng = np.random.default_rng(
+            np.random.SeedSequence([sp.seed, req.rid, len(req.output)])
+        )
+        return sample_logits(row, sp, rng)
+
+    # ---------------- admission / prefill ----------------
+
+    def _start_decode(self, slot: int, req: Request, first: int) -> None:
+        """Move a fully-prefilled request onto its decode lane."""
+        req.t_first_token = time.monotonic()
+        self.stats.ttfts.append(req.ttft)
+        req.output.append(first)
+        req._enter(RequestState.DECODE)
+        p = len(req.prompt)
+        self._token[slot, 0] = first
+        self._lengths[slot] = p
+        self._row_table[slot] = self.pool.rows_of(req.rid, pad_to=self.s_max)
+        self._table_dirty = True
+        if len(req.output) >= req.max_new_tokens:
+            self._complete(slot)
+
     def _admit_one(self) -> bool:
-        """Admit + prefill the head-of-queue request if resources allow."""
+        """Admit the head-of-queue request if resources allow.
+
+        Prompts within the admission budget prefill in one batched step;
+        longer (chunkable-family) prompts are admitted only when no other
+        request holds budget, then stream through ``prefill_chunk``-sized
+        rounds so admission never stalls decode for a whole long prompt.
+        """
         if not self.queue:
             return False
         slot = self._free_slot()
         if slot is None:
             return False
         req = self.queue[0]
-        if self.committed_tokens + req.total_tokens > self.token_budget:
+        over_budget = (
+            self.committed_tokens + req.total_tokens > self.token_budget
+        )
+        if over_budget and self.committed_tokens > 0:
             return False
         if not self.pool.can_admit(req.total_tokens):
             return False
         self.queue.popleft()
         req._enter(RequestState.PREFILL)
         self.pool.admit(req.rid, req.total_tokens)
-
         p = len(req.prompt)
+
+        if self.cfg.family != "moe" and p > self.prefill_chunk:
+            # chunked prefill: reserve the lane now, feed chunks per round
+            self.active[slot] = req.rid
+            self._chunk_cursor[req.rid] = 0
+            self._prefill_one_chunk(slot)
+            return True
+
         if self.cfg.family == "moe":
             # MoE capacity routing is cross-token: padded positions compete
             # for per-expert capacity and perturb real tokens' outputs, so
@@ -225,19 +313,43 @@ class Scheduler:
         self.pool.write_prefill(req.rid, ks[:, 0], vs[:, 0], n_tokens=p)
         self.stats.prefill_steps += 1
 
-        first = int(self.sample(np.asarray(logits[0, :, :]))[0])
-        req.t_first_token = time.monotonic()
-        self.stats.ttfts.append(req.ttft)
-        req.output.append(first)
-        req._enter(RequestState.DECODE)
+        first = self._sample_one(req, np.asarray(logits[0, 0, :]))
         self.active[slot] = req.rid
-        self._token[slot, 0] = first
-        self._lengths[slot] = p
-        self._row_table[slot] = self.pool.rows_of(req.rid, pad_to=self.s_max)
-        self._table_dirty = True
-        if len(req.output) >= req.max_new_tokens:
-            self._complete(slot)
+        self._start_decode(slot, req, first)
         return True
+
+    def _prefill_one_chunk(self, slot: int) -> None:
+        """Run one ``prefill_chunk``-sized piece of a long prompt."""
+        rid = self.active[slot]
+        req = self.requests[rid]
+        c0 = self._chunk_cursor[rid]
+        p = len(req.prompt)
+        c = self.prefill_chunk
+        n = min(c, p - c0)
+        self.pool.note_tokens(rid, c0 + n)
+        scratch = int(self.pool.scratch_rows(1)[0])
+        rows = self.pool.rows_of(rid)[c0 : c0 + n]
+        write_rows = np.full((1, c), scratch, np.int32)
+        write_rows[0, :n] = rows
+        tokens = np.zeros((1, c), np.int32)
+        tokens[0, :n] = req.prompt[c0 : c0 + n]
+        row_table = self.pool.rows_of(rid, pad_to=self.s_max)[None]
+        logits, self.pool.k, self.pool.v = self._chunk_prefill(
+            self.params,
+            jnp.asarray(tokens),
+            self.pool.k,
+            self.pool.v,
+            jnp.asarray(row_table),
+            jnp.asarray(write_rows),
+            jnp.asarray(c0, jnp.int32),
+            jnp.asarray(n - 1, jnp.int32),
+        )
+        self.stats.prefill_steps += 1
+        self._chunk_cursor[rid] = c0 + n
+        if c0 + n >= p:
+            del self._chunk_cursor[rid]
+            first = self._sample_one(req, np.asarray(logits[0, 0, :]))
+            self._start_decode(slot, req, first)
 
     def _complete(self, slot: int) -> None:
         rid = self.active[slot]
@@ -252,10 +364,16 @@ class Scheduler:
         self.stats.completed += 1
         self.stats.generated_tokens += len(req.output)
 
+    def _decoding(self, rid: int | None) -> bool:
+        return (
+            rid is not None
+            and self.requests[rid].state is RequestState.DECODE
+        )
+
     def _decode_step(self) -> None:
         for i, rid in enumerate(self.active):
-            if rid is None:
-                continue
+            if not self._decoding(rid):
+                continue  # empty lane, or a mid-chunked-prefill reservation
             # room for the incoming token's KV row
             before = self.pool.blocks_held(rid)
             self.pool.note_tokens(rid, int(self._lengths[i]) + 1)
@@ -274,17 +392,18 @@ class Scheduler:
             jnp.asarray(self._lengths),
         )
         self.stats.decode_steps += 1
-        nxt = self.sample(np.asarray(logits[:, 0, :])).astype(np.int32)
+        rows = np.asarray(logits[:, 0, :])
         util = self.pool.stats().utilization
         self.stats.util_samples_any.append(util)
         if all(r is not None for r in self.active):
             self.stats.util_samples.append(util)
         for i, rid in enumerate(self.active):
-            if rid is None:
+            if not self._decoding(rid):
                 continue
             req = self.requests[rid]
-            req.output.append(int(nxt[i]))
-            self._token[i, 0] = nxt[i]
+            nxt = self._sample_one(req, rows[i])
+            req.output.append(nxt)
+            self._token[i, 0] = nxt
             self._lengths[i] += 1
             if len(req.output) >= req.max_new_tokens:
                 self._complete(i)
@@ -292,12 +411,16 @@ class Scheduler:
     # ---------------- main loop ----------------
 
     def round(self) -> None:
-        """One scheduler round: drain admissions, then R_F decode steps."""
+        """One scheduler round: drain admissions, advance one chunk of any
+        mid-prefill long prompt, then R_F decode steps."""
         while self._admit_one():
             pass
+        for i, rid in enumerate(self.active):
+            if rid is not None and rid in self._chunk_cursor:
+                self._prefill_one_chunk(i)
         t0 = time.monotonic()
         for _ in range(self.decode_per_round):
-            if not any(r is not None for r in self.active):
+            if not any(self._decoding(r) for r in self.active):
                 break
             self._decode_step()
         self.stats.decode_time += time.monotonic() - t0

@@ -132,3 +132,43 @@ def make_pool_prefill_step(cfg: ModelConfig) -> Callable:
         return lm.prefill_with_cache(params, cfg, tokens, last_idx)
 
     return step
+
+
+def make_chunk_prefill_step(cfg: ModelConfig) -> Callable:
+    """One prompt-chunk prefill against the pool (chunked admission).
+
+    (params, tokens (B, C), pool_k, pool_v, row_table (B, S_max),
+    write_rows (B, C), start (), last_idx ()) -> (logits at last_idx
+    (B, 1, V), new pool_k, new pool_v). ``start`` is traced, so one trace
+    serves every chunk offset of every request. Jit with
+    ``donate_argnums=(2, 3)`` so the pool updates in place.
+    """
+
+    def step(params, tokens, pool_k, pool_v, row_table, write_rows, start,
+             last_idx):
+        return lm.prefill_chunk_paged(
+            params, cfg, tokens, pool_k, pool_v, row_table, write_rows,
+            start, last_idx,
+        )
+
+    return step
+
+
+def make_budgeted_paged_serve_step(
+    cfg: ModelConfig, stream_mask: tuple, stream_depth: int
+) -> Callable:
+    """The paged serve step under a ``runtime.residency`` plan: layers
+    whose FFN the plan left in HBM stream their weights through the
+    ``kernels.weight_stream`` ring (depth = the plan's R_F analogue);
+    resident layers run the standard in-VMEM path. Same signature as
+    ``make_paged_serve_step``.
+    """
+    mask = jnp.asarray(stream_mask, bool)
+
+    def step(params, token, pool_k, pool_v, row_table, lengths):
+        return lm.decode_step_paged(
+            params, cfg, token, pool_k, pool_v, row_table, lengths,
+            stream_mask=mask, stream_depth=stream_depth,
+        )
+
+    return step

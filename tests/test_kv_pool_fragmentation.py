@@ -1,0 +1,139 @@
+"""KV-pool fragmentation under churn: freed blocks must be *reused*
+(no monotonic high-water growth across request generations), commitment
+accounting must stay exact through mixed alloc/free interleavings, and
+the allocator invariants must hold at every step.
+
+Property-style via hypothesis (the deterministic ``repro.testing`` stub
+in hermetic environments): each example drives a random admit/grow/
+release schedule against a small pool and checks the allocator after
+every operation.
+"""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.runtime.kv_pool import KVPool
+
+BLOCK = 4
+N_BLOCKS = 17  # 16 usable
+
+
+def _pool():
+    return KVPool(
+        get_smoke_config("smollm_360m"), n_blocks=N_BLOCKS, block_tokens=BLOCK
+    )
+
+
+def test_freed_blocks_are_reused_not_grown():
+    """Generations of admit/fill/release must cycle the same physical
+    blocks: the union of blocks ever handed out stays bounded by the
+    pool size (no high-water creep), and later generations actually
+    reuse earlier generations' freed blocks."""
+    pool = _pool()
+    seen: set[int] = set()
+    generations = []
+    for gen in range(6):
+        rids = [gen * 10 + i for i in range(4)]
+        held: set[int] = set()
+        for rid in rids:
+            pool.admit(rid, 16)
+            pool.note_tokens(rid, 16)
+            held.update(pool._held[rid])
+        pool.validate()
+        assert len(held) == 16  # the whole pool, every generation
+        generations.append(held)
+        seen |= held
+        for rid in rids:
+            pool.release(rid)
+        pool.validate()
+        assert pool.free_blocks == pool.usable_blocks
+    assert len(seen) <= pool.usable_blocks, "allocator leaked new blocks"
+    for later in generations[1:]:
+        assert later & generations[0], "freed blocks never reused"
+
+
+def test_interleaved_churn_keeps_commitment_exact():
+    """Alternating short/long requests with out-of-order releases: the
+    uncommitted-free invariant (sum of committed-not-held <= free) must
+    hold exactly, and admission must be refused precisely when the
+    commitment arithmetic says so."""
+    pool = _pool()
+    pool.admit(0, 32)  # 8 blocks committed
+    pool.admit(1, 8)  # 2 blocks
+    pool.note_tokens(0, 5)  # holds 2
+    pool.note_tokens(1, 8)  # holds 2
+    assert pool.outstanding_commitment == (8 - 2) + 0
+    # free = 12, uncommitted = 12 - 6 = 6 blocks = 24 tokens
+    assert pool.can_admit(24)
+    assert not pool.can_admit(25)
+    pool.release(1)
+    assert pool.can_admit(32)
+    pool.admit(2, 32)
+    pool.note_tokens(2, 32)
+    pool.note_tokens(0, 32)
+    pool.validate()
+    assert pool.free_blocks == 0
+    assert pool.outstanding_commitment == 0
+    pool.release(0)
+    pool.release(2)
+    assert pool.free_blocks == pool.usable_blocks
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_random_churn_invariants(data):
+    """Random admit/grow/release schedule: validate() after every op,
+    released blocks return to the free list, and the pool always drains
+    back to empty."""
+    pool = _pool()
+    live: dict[int, int] = {}  # rid -> total committed tokens
+    next_rid = 0
+    for _ in range(30):
+        ops = ["admit", "grow", "release"]
+        op = data.draw(st.sampled_from(ops), label="op")
+        if op == "admit":
+            total = data.draw(st.integers(1, 24), label="total")
+            if pool.can_admit(total):
+                pool.admit(next_rid, total)
+                live[next_rid] = total
+                next_rid += 1
+        elif op == "grow" and live:
+            rid = data.draw(
+                st.sampled_from(sorted(live)), label="rid"
+            )
+            tokens = data.draw(
+                st.integers(1, live[rid]), label="tokens"
+            )
+            # note_tokens must accept any count within the commitment,
+            # non-monotone calls included (it only ever grows the hold)
+            pool.note_tokens(rid, max(tokens, pool.tokens_held(rid)))
+        elif op == "release" and live:
+            rid = data.draw(
+                st.sampled_from(sorted(live)), label="rid"
+            )
+            pool.release(rid)
+            del live[rid]
+        pool.validate()
+        held = sum(pool.blocks_held(r) for r in live)
+        assert held + pool.free_blocks == pool.usable_blocks
+        assert pool.outstanding_commitment <= pool.free_blocks
+    for rid in list(live):
+        pool.release(rid)
+    pool.validate()
+    assert pool.free_blocks == pool.usable_blocks
+    assert pool.stats().held_tokens == 0
+
+
+def test_over_commitment_growth_is_refused():
+    pool = _pool()
+    pool.admit(0, 8)
+    pool.note_tokens(0, 8)
+    with pytest.raises(RuntimeError):
+        pool.note_tokens(0, 9)
+    # the failed growth must not corrupt accounting
+    pool.validate()
+    assert pool.blocks_held(0) == 2
+    pool.release(0)
+    assert pool.free_blocks == pool.usable_blocks

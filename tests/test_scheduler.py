@@ -3,6 +3,8 @@ admission, request lifecycle ordering, queue draining, and decode-output
 equivalence between the pool-indexed serve step and the per-slot ring
 path."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -240,6 +242,165 @@ def test_staggered_lanes_decode_independently():
     for i, p in enumerate(prompts):
         alone = outputs_of([p])
         assert together[i] == alone[0], f"request {i} diverged"
+
+
+# ---------------- sampling (temperature / top-k / top-p) ----------------
+
+
+def _run_sampled(cfg, params, prompts, sampling, gen=GEN):
+    sched = _sched(cfg, params, sampling=sampling)
+    for p in prompts:
+        sched.submit(p, gen)
+    sched.run()
+    return sched.outputs()
+
+
+def test_temperature_zero_is_greedy():
+    """Greedy is exactly the temperature=0 special case of the sampler."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    prompts = _prompts(3, cfg.vocab, seed=11)
+    greedy_default = _run_sampled(cfg, params, prompts, None)
+    t0 = _run_sampled(cfg, params, prompts, lm.SamplingParams(temperature=0.0))
+    k1 = _run_sampled(
+        cfg, params, prompts, lm.SamplingParams(temperature=5.0, top_k=1)
+    )
+    assert greedy_default == t0 == k1
+
+
+def test_sampling_is_seed_deterministic():
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    prompts = _prompts(3, cfg.vocab, seed=12)
+    sp = lm.SamplingParams(temperature=0.9, top_k=40, top_p=0.95, seed=7)
+    a = _run_sampled(cfg, params, prompts, sp)
+    b = _run_sampled(cfg, params, prompts, sp)
+    assert a == b, "same seed must replay identical tokens"
+    c = _run_sampled(cfg, params, prompts, dataclasses.replace(sp, seed=8))
+    assert a != c, "a different seed should perturb sampled output"
+    g = _run_sampled(cfg, params, prompts, None)
+    assert a != g, "temperature 0.9 should diverge from greedy"
+
+
+def test_sampled_requests_independent_of_lane_placement():
+    """The staggered-lane invariant extends to sampling: the rng is keyed
+    on (seed, rid, position), not on lanes or co-residents — but rids are
+    scheduler-local, so the 'alone' run must replay the same rid."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    prompts = _prompts(3, cfg.vocab, seed=13)
+    sp = lm.SamplingParams(temperature=0.8, top_k=0, top_p=0.9, seed=3)
+    together = _run_sampled(cfg, params, prompts, sp)
+
+    sched = _sched(cfg, params, sampling=sp)
+    sched.submit(prompts[0], GEN)  # rid 0
+    sched.submit(prompts[1], GEN)  # rid 1
+    sched.submit(prompts[2], GEN)  # rid 2: staggered behind the first two
+    sched.run()
+    assert sched.outputs() == together
+
+
+def test_top_k_restricts_support():
+    from repro.models.lm import SamplingParams, sample_logits
+
+    rng = np.random.default_rng(0)
+    row = np.array([0.0, 1.0, 2.0, 3.0, 10.0], np.float32)
+    for _ in range(20):
+        t = sample_logits(row, SamplingParams(temperature=1.0, top_k=2), rng)
+        assert t in (3, 4)
+        t = sample_logits(
+            row, SamplingParams(temperature=1.0, top_p=1e-6), rng
+        )
+        assert t == 4  # nucleus always keeps >= 1 token
+    # top_k >= V is unrestricted, not a numpy partition crash
+    t = sample_logits(row, SamplingParams(temperature=1.0, top_k=99), rng)
+    assert 0 <= t < len(row)
+    # greedy never touches the rng (rng=None is legal)
+    assert sample_logits(row, SamplingParams(), None) == 4
+
+
+# ---------------- chunked prefill ----------------
+
+
+def test_long_prompt_over_budget_is_chunked():
+    """Regression (ISSUE 3): a prompt longer than the admission token
+    budget must be admitted and split across scheduler rounds, not
+    rejected and not prefilled in one monopolizing step — and its tokens
+    must equal the single-shot prefill of a large-budget scheduler."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(21)
+    max_len = 40
+    long_p = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+
+    def run(budget, chunk=None):
+        pool = KVPool(
+            cfg, n_blocks=1 + 2 * max_len // BLOCK, block_tokens=BLOCK
+        )
+        sched = Scheduler(
+            cfg, params, pool, slots=2, max_len=max_len,
+            token_budget=budget, prefill_chunk=chunk,
+        )
+        sched.submit(long_p, GEN)
+        stats = sched.run()
+        return sched.outputs()[0], stats
+
+    chunked, st_c = run(budget=16)  # 24-token prompt -> 16 + 8 chunks
+    single, st_s = run(budget=64)
+    assert st_s.prefill_steps == 1
+    assert st_c.prefill_steps == 2, "prompt must split into budget chunks"
+    assert chunked == single, "chunked prefill changed the tokens"
+    assert st_c.completed == st_s.completed == 1
+
+
+def test_chunked_prefill_coexists_with_decode():
+    """Short requests admitted before a long prompt keep decoding while
+    the long prompt chunks through its prefill rounds."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(22)
+    max_len = 48
+    pool = KVPool(cfg, n_blocks=1 + 3 * max_len // BLOCK, block_tokens=BLOCK)
+    sched = Scheduler(
+        cfg, params, pool, slots=3, max_len=max_len,
+        token_budget=40, prefill_chunk=8,
+    )
+    short = _prompts(2, cfg.vocab, seed=23)
+    long_p = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+    for p in short:
+        sched.submit(p, GEN)
+    sched.submit(long_p, GEN)
+    stats = sched.run()
+    assert stats.completed == 3
+    assert stats.prefill_steps == 2 + 3  # 2 single-shot + 24/8 chunks
+    outs = sched.outputs()
+    assert all(len(v) == GEN for v in outs.values())
+    # the long request's (greedy) output must match it running alone:
+    # per-lane positions + pool-gathered chunk attention keep chunked
+    # prefill independent of co-resident decode traffic
+    alone_pool = KVPool(
+        cfg, n_blocks=1 + 3 * max_len // BLOCK, block_tokens=BLOCK
+    )
+    alone = Scheduler(
+        cfg, params, alone_pool, slots=3, max_len=max_len,
+        token_budget=40, prefill_chunk=8,
+    )
+    alone.submit(long_p, GEN)
+    alone.run()
+    assert outs[2] == alone.outputs()[0]
+
+
+def test_moe_over_budget_prompt_still_rejected():
+    """MoE cannot chunk (cross-token capacity routing): the admission
+    budget stays a hard submit-time cap with an actionable message."""
+    cfg = get_smoke_config("olmoe_1b_7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    pool = KVPool.for_slots(cfg, slots=2, max_len=64, block_tokens=BLOCK)
+    sched = Scheduler(
+        cfg, params, pool, slots=2, max_len=64, token_budget=16
+    )
+    with pytest.raises(ValueError, match="cannot chunk"):
+        sched.submit(np.zeros(20, np.int32), GEN)
 
 
 def test_moe_pool_prefill_is_unpadded():
