@@ -1,0 +1,202 @@
+"""Fleet benchmark: single engine vs symmetric fleet vs disaggregated.
+
+All modes serve the *same* seed-deterministic synthetic trace
+(``runtime.cluster.traffic``) with the same smoke-config model, on the
+virtual clock calibrated to the full-size arch — so every number here is
+bit-reproducible on any host. Four modes:
+
+  * ``single``       — 1 engine (the PR-2/3 scheduler, instrumented);
+  * ``fleet2``       — 2 identical engines, least-loaded router;
+  * ``disagg_gals``  — 4 engines split into prefill/decode roles by the
+    GALS Eq. 2 provisioning (``required_rf`` over measured rates);
+  * ``disagg_naive`` — the same 4 engines forced to a 1:1 role split.
+
+Plus a packed (w_bits=1) single/disagg pair for the FCMP token-identity
+gate. Band checks:
+
+  1. every mode's token streams are identical to single-engine serving
+     (temperature 0) — the disaggregation-correctness gate;
+  2. goodput at 2 engines >= 1.8x the single engine on the saturating
+     trace — the fleet actually scales;
+  3. the GALS-provisioned split matches or beats the naive 1:1 split on
+     TTFT p99 (and on goodput) — the paper's ratio algebra earns its
+     keep as a fleet-sizing knob.
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py --smoke \
+        [--out fleet_bench.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+GOODPUT_FLOOR = 1.8  # fleet2 goodput vs single
+TTFT_MARGIN = 1.001  # gals p99 must be <= naive p99 * margin
+
+ARCH = "smollm_360m"
+SLOTS = 4
+SLO_TTFT = 0.03
+SLO_TPOT = 0.002
+
+
+def _spec(vocab: int, n_requests: int = 32):
+    from repro.runtime.cluster import TrafficSpec
+
+    return TrafficSpec(
+        n_requests=n_requests,
+        arrival_rate=2000.0,
+        vocab=vocab,
+        seed=1,
+    )
+
+
+def _run_mode(mode, cfg, full_cfg, params, spec, trace, split=None):
+    from repro.runtime.cluster import (
+        DisaggCluster,
+        FleetCluster,
+        SloPolicy,
+        StepCostModel,
+    )
+    from repro.runtime.kv_pool import choose_block_tokens
+
+    cost = StepCostModel.for_config(full_cfg, slots=SLOTS)
+    common = dict(
+        slots=SLOTS,
+        max_len=spec.max_total_tokens + 8,
+        block_tokens=choose_block_tokens([spec.max_total_tokens]),
+        cost=cost,
+    )
+    if mode.startswith("disagg"):
+        cluster = DisaggCluster(
+            cfg, params, n_engines=4, spec=spec, split=split, **common
+        )
+    else:
+        cluster = FleetCluster(
+            cfg, params, n_engines=1 if mode == "single" else 2, **common
+        )
+    result = cluster.run(trace)
+    report = result.report(SloPolicy(ttft=SLO_TTFT, tpot=SLO_TPOT))
+    row = {
+        "mode": mode,
+        "engines": len(cluster.engines),
+        "split": "x".join(map(str, getattr(cluster, "split", ()) or ())),
+        "quant": cfg.w_bits,
+        **report.row(),
+    }
+    return row, result.outputs
+
+
+def run(n_requests: int = 32) -> list[dict]:
+    import jax
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import lm
+
+    cfg = get_smoke_config(ARCH)
+    full_cfg = get_config(ARCH)
+    params = lm.init_params(cfg, jax.random.key(0))
+    spec = _spec(cfg.vocab, n_requests)
+    from repro.runtime.cluster import synthesize
+
+    trace = synthesize(spec)
+
+    rows = []
+    reference = None
+    for mode, split in (
+        ("single", None),
+        ("fleet2", None),
+        ("disagg_gals", None),
+        ("disagg_naive", (2, 2)),
+    ):
+        row, outputs = _run_mode(
+            mode, cfg, full_cfg, params, spec, trace, split=split
+        )
+        if reference is None:
+            reference = outputs
+        row["token_identical"] = outputs == reference
+        rows.append(row)
+
+    # FCMP-packed variant: single vs GALS disagg, token identity only
+    pcfg = dataclasses.replace(cfg, w_bits=1)
+    pfull = dataclasses.replace(full_cfg, w_bits=1)
+    pparams = lm.init_params(pcfg, jax.random.key(0))
+    pref = None
+    for mode, split in (("single", None), ("disagg_gals", None)):
+        row, outputs = _run_mode(
+            mode, pcfg, pfull, pparams, spec, trace, split=split
+        )
+        if pref is None:
+            pref = outputs
+        row["mode"] = f"packed_{mode}"
+        row["token_identical"] = outputs == pref
+        rows.append(row)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    by = {r["mode"]: r for r in rows}
+    needed = ("single", "fleet2", "disagg_gals", "disagg_naive",
+              "packed_single", "packed_disagg_gals")
+    missing = [m for m in needed if m not in by]
+    if missing:
+        return [f"missing mode rows: {missing}"]
+    for r in rows:
+        if not r["token_identical"]:
+            errs.append(f"{r['mode']}: token streams diverged from single")
+        if r["completed"] != r["n_requests"]:
+            errs.append(
+                f"{r['mode']}: {r['completed']}/{r['n_requests']} completed"
+            )
+    single, fleet2 = by["single"], by["fleet2"]
+    ratio = fleet2["goodput_tokens_per_s"] / max(
+        single["goodput_tokens_per_s"], 1e-9
+    )
+    if ratio < GOODPUT_FLOOR:
+        errs.append(
+            f"fleet2 goodput only {ratio:.2f}x single (< {GOODPUT_FLOOR}x)"
+        )
+    gals, naive = by["disagg_gals"], by["disagg_naive"]
+    if gals["ttft_p99"] > naive["ttft_p99"] * TTFT_MARGIN:
+        errs.append(
+            f"GALS split TTFT p99 {gals['ttft_p99']:.4f}s worse than naive "
+            f"1:1 {naive['ttft_p99']:.4f}s"
+        )
+    if gals["goodput_tokens_per_s"] < naive["goodput_tokens_per_s"]:
+        errs.append("GALS split goodput below the naive 1:1 split")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CPU cell (the only cell this bench runs)")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--out", default="fleet_bench.json")
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        print("[fleet_bench] only the reduced --smoke cell is implemented "
+              "(full-size fleets need real accelerators); pass --smoke")
+        return 2
+    rows = run(args.requests)
+    errs = check(rows)
+    keys = list(rows[0])
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    for e in errs:
+        print(f"  BAND-CHECK FAIL: {e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "failures": errs}, f, indent=2)
+        print(f"[fleet_bench] wrote {args.out}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

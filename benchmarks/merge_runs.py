@@ -1,12 +1,31 @@
-"""Merge dry-run jsonl files: later records replace earlier ones with the
-same (arch, shape, mesh, quant) key. Used to splice re-measured cells into
-a sweep artifact after a targeted fix.
+"""Merge benchmark jsonl files: later records replace earlier ones with
+the same identity key. Used to splice re-measured cells into a sweep
+artifact after a targeted fix.
+
+Two record shapes are understood: dry-run cells, keyed
+(arch, shape, mesh, quant, vmem budget), and flat fleet rows as emitted
+in ``benchmarks/fleet_bench.py``'s "rows" list, keyed
+(mode, engines, split, quant). (A ``launch.fleet --json`` report is one
+nested object, not jsonl — flatten it via ``report.load_fleet`` first.)
 
     python benchmarks/merge_runs.py out.jsonl base.jsonl patch1.jsonl ...
 """
 
 import json
 import sys
+
+
+def record_key(r: dict) -> tuple:
+    if "arch" in r:  # a dry-run cell
+        return (
+            "dryrun", r["arch"], r["shape"], r["mesh"],
+            r.get("quant", 0), r.get("vmem_budget_mib", 0),
+        )
+    # a fleet row: TTFT/TPOT percentiles keyed by topology
+    return (
+        "fleet", r.get("mode"), r.get("engines"),
+        r.get("split", ""), r.get("quant", 0),
+    )
 
 
 def merge(paths: list[str]) -> list[dict]:
@@ -16,7 +35,7 @@ def merge(paths: list[str]) -> list[dict]:
         with open(p) as fh:
             for line in fh:
                 r = json.loads(line)
-                key = (r["arch"], r["shape"], r["mesh"], r.get("quant", 0))
+                key = record_key(r)
                 if key not in recs:
                     order.append(key)
                 recs[key] = r

@@ -55,22 +55,34 @@ MOVE_HINTS = {
 
 
 def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
+    # decode cells compiled under --vmem-budget carry a budgeted memory
+    # term (the residency plan's pinned weight blocks subtracted from the
+    # per-step HBM traffic); quote it next to the unbudgeted one
+    budgeted = any("t_memory_budgeted_ms" in r for r in recs)
+    bcol = " T_mem budgeted ms |" if budgeted else ""
     lines = [
-        "| arch | shape | T_compute ms | T_memory ms | T_coll ms | bottleneck | MODEL_FLOPS/HLO | roofline % | to move the dominant term |",
-        "|---|---|---|---|---|---|---|---|---|",
+        "| arch | shape | T_compute ms | T_memory ms |" + bcol +
+        " T_coll ms | bottleneck | MODEL_FLOPS/HLO | roofline % | to move the dominant term |",
+        "|---|---|---|---|" + ("---|" if budgeted else "") + "---|---|---|---|---|",
     ]
     for r in recs:
         if r["mesh"] != mesh:
             continue
         if r["status"] != "OK":
+            dashes = "— | " * (1 if budgeted else 0)
             lines.append(
-                f"| {r['arch']} | {r['shape']} | — | — | — | {r['status']} | — | — | — |"
+                f"| {r['arch']} | {r['shape']} | — | — | {dashes}— | "
+                f"{r['status']} | — | — | — |"
             )
             continue
+        bcell = ""
+        if budgeted:
+            bv = r.get("t_memory_budgeted_ms")
+            bcell = f" {bv:.2f} |" if bv is not None else " — |"
         lines.append(
-            "| {arch} | {shape} | {tc:.2f} | {tm:.2f} | {tl:.2f} | {b} | {u:.3f} | {rf:.2f} | {hint} |".format(
+            "| {arch} | {shape} | {tc:.2f} | {tm:.2f} |{bc} {tl:.2f} | {b} | {u:.3f} | {rf:.2f} | {hint} |".format(
                 arch=r["arch"], shape=r["shape"],
-                tc=r["t_compute_ms"], tm=r["t_memory_ms"],
+                tc=r["t_compute_ms"], tm=r["t_memory_ms"], bc=bcell,
                 tl=r["t_collective_ms"], b=r["bottleneck"],
                 u=r["useful_flops_ratio"],
                 rf=100 * r["roofline_fraction"],
@@ -80,11 +92,60 @@ def roofline_table(recs: list[dict], mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
+def fleet_table(rows: list[dict]) -> str:
+    """Render ``benchmarks/fleet_bench.py`` rows (or ``launch.fleet``
+    --json reports) with the TTFT/TPOT percentile fields."""
+    lines = [
+        "| mode | engines | split | TTFT p50/p95/p99 ms | TPOT p50/p99 ms | goodput tok/s | throughput tok/s | in-SLO | tokens exact |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            "| {mode} | {n} | {split} | {t50:.1f}/{t95:.1f}/{t99:.1f} | "
+            "{p50:.2f}/{p99:.2f} | {good:.0f} | {thr:.0f} | {met}/{nr} | {tok} |".format(
+                mode=r["mode"], n=r["engines"], split=r.get("split") or "—",
+                t50=r["ttft_p50"] * 1e3, t95=r["ttft_p95"] * 1e3,
+                t99=r["ttft_p99"] * 1e3,
+                p50=r["tpot_p50"] * 1e3, p99=r["tpot_p99"] * 1e3,
+                good=r["goodput_tokens_per_s"],
+                thr=r["throughput_tokens_per_s"],
+                met=r["slo_met"], nr=r["n_requests"],
+                tok=(
+                    ("yes" if r["token_identical"] else "NO")
+                    if "token_identical" in r
+                    else "—"  # driver reports don't run the identity A/B
+                ),
+            )
+        )
+    return "\n".join(lines)
+
+
+def load_fleet(path: str) -> list[dict]:
+    """Fleet rows from the bench JSON ({"rows": [...]}), a single
+    ``launch.fleet --json`` report (percentiles nested under "report"),
+    or a merged jsonl of flat row records."""
+    with open(path) as fh:
+        head = fh.read(1)
+        fh.seek(0)
+        if head != "{":
+            return [json.loads(l) for l in fh]
+        data = json.load(fh)
+    if "rows" in data:
+        return data["rows"]
+    return [{
+        "mode": data["mode"],
+        "engines": data["engines"],
+        "split": "x".join(map(str, data.get("split") or [])),
+        **data["report"],
+    }]
+
+
 if __name__ == "__main__":
-    recs = load(sys.argv[1] if len(sys.argv) > 1 else
-                "experiments/dryrun_baseline.jsonl")
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun_baseline.jsonl"
     which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
-    if which == "roofline":
-        print(roofline_table(recs))
+    if which == "fleet":
+        print(fleet_table(load_fleet(path)))
+    elif which == "roofline":
+        print(roofline_table(load(path)))
     else:
-        print(dryrun_table(recs))
+        print(dryrun_table(load(path)))

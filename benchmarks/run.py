@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     fig2_efficiency,
+    fleet_bench,
     kernel_bench,
     residency_bench,
     roofline_table,
@@ -33,6 +34,8 @@ BENCHES = [
     ("roofline_table (40-cell dry-run)", roofline_table),
     ("serve_bench (KV-pool continuous batching vs fixed-batch)", serve_bench),
     ("residency_bench (budgeted weight residency + §V port)", residency_bench),
+    ("fleet_bench (multi-engine fleet + disaggregated prefill/decode)",
+     fleet_bench),
 ]
 
 

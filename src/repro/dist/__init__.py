@@ -29,6 +29,12 @@ Layering:
   prefer tensor-parallel, expert-parallel or table sharding.
 * ``sharding``   — the public policy: ``param_specs``, ``batch_specs``,
   ``cache_specs``, ``token_spec``.
+* ``placement``  — fleet scale-out: slice a mesh's batch axes into
+  per-engine replica sub-meshes (``plan_engine_placement``).
 """
 
 from repro.dist import sharding  # noqa: F401 — canonical entry point
+from repro.dist.placement import (  # noqa: F401
+    EnginePlacement,
+    plan_engine_placement,
+)

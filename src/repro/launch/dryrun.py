@@ -159,6 +159,52 @@ def lower_cell(
     return lowered, {"kind": shape.kind}
 
 
+def fold_residency(
+    rec: dict, cfg: ModelConfig, shape, vmem_budget_mib: float
+) -> dict:
+    """Fold a ``runtime.residency`` plan into a decode roofline record.
+
+    The residency planner pins the highest-traffic FFN weight regions
+    into a VMEM budget; whatever is pinned stops moving over HBM every
+    decode step. This re-quotes the record's memory term with those
+    bytes subtracted (weights are sharded, so the per-replica saving is
+    divided across devices), plus the budgeted bottleneck — the dry-run
+    analogue of serving with ``--vmem-budget``.
+    """
+    from repro.perf.roofline import HW
+    from repro.runtime.residency import TrafficProfile, compile_residency_plan
+    from repro.runtime.residency.executor import supports_budgeted_decode
+
+    rec = dict(rec)
+    rec["vmem_budget_mib"] = vmem_budget_mib
+    if shape.kind != "decode" or not supports_budgeted_decode(cfg):
+        rec["residency"] = None  # budget has nothing to pin in this cell
+        return rec
+    n_dev = 512 if rec["mesh"] == "2x16x16" else 256
+    plan = compile_residency_plan(
+        cfg,
+        vmem_budget_bytes=int(vmem_budget_mib * 2**20),
+        traffic=TrafficProfile(
+            lanes=shape.global_batch, prompt_len=shape.seq_len
+        ),
+    )
+    saved_per_dev = (
+        plan.streamable_bytes_per_step - plan.streamed_bytes_per_step
+    ) / n_dev
+    hbm_budgeted = max(0.0, rec["hbm_bytes_per_dev"] - saved_per_dev)
+    t_mem = hbm_budgeted / HW.hbm_bw
+    rec["residency"] = plan.summary()
+    rec["hbm_bytes_per_dev_budgeted"] = hbm_budgeted
+    rec["t_memory_budgeted_ms"] = t_mem * 1e3
+    terms = {
+        "compute": rec["t_compute_ms"],
+        "memory": t_mem * 1e3,
+        "collective": rec["t_collective_ms"],
+    }
+    rec["bottleneck_budgeted"] = max(terms, key=terms.get)
+    return rec
+
+
 def run_cell(
     arch: str,
     shape_name: str,
@@ -168,6 +214,7 @@ def run_cell(
     ce_chunk: int = 512,
     quant: int = 0,
     constraints: bool = True,
+    vmem_budget_mib: float = 0.0,
     verbose: bool = True,
 ) -> dict:
     """Lower + compile one cell; return the §Dry-run / §Roofline record."""
@@ -232,6 +279,8 @@ def run_cell(
         "useful_flops_ratio": rl.useful_flops_ratio,
         "roofline_fraction": rl.roofline_fraction,
     }
+    if vmem_budget_mib:
+        rec = fold_residency(rec, cfg, shape, vmem_budget_mib)
     if verbose:
         print(
             f"[dryrun] {arch:22s} {shape_name:12s} {rec['mesh']:8s} OK  "
@@ -257,6 +306,12 @@ def main(argv=None) -> int:
         "--no-constraints", action="store_true",
         help="disable the Perf-iteration sharding hooks (paper-faithful "
         "baseline measurements)",
+    )
+    ap.add_argument(
+        "--vmem-budget", type=float, default=0.0,
+        help="MiB of VMEM for pinned weight blocks: decode cells on "
+        "budget-supporting families additionally quote the *budgeted* "
+        "HBM traffic / memory term from the residency plan",
     )
     ap.add_argument("--json", default="")
     args = ap.parse_args(argv)
@@ -286,6 +341,7 @@ def main(argv=None) -> int:
                         arch, shape, multi_pod=mp, remat=args.remat,
                         ce_chunk=args.ce_chunk, quant=args.quant,
                         constraints=not args.no_constraints,
+                        vmem_budget_mib=args.vmem_budget,
                     )
                 except Exception as e:  # noqa: BLE001 — report all failures
                     rec = {

@@ -1,0 +1,210 @@
+"""Fleet-serving driver: N engines behind a router, on a virtual clock.
+
+Modes::
+
+    single  one engine (the PR-2/3 scheduler, fleet-instrumented)
+    fleet   N identical engines behind the router (least-loaded or
+            session-affinity dispatch, token-budget-aware admission)
+    disagg  prefill and decode engine roles with KV-block handoff; the
+            role split is provisioned from ``core.gals.required_rf``
+            applied to the measured prefill/decode rates (override with
+            --split P,D)
+
+Engines run the real model (token streams are identical across modes at
+temperature 0 — the fleet acceptance gate), while time is charged on a
+roofline-derived virtual clock calibrated to the *full-size* arch, so
+TTFT/TPOT/goodput are deterministic and meaningful on a CPU host.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.fleet --arch smollm_360m \
+        --smoke --mode disagg --engines 4
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.dist.mesh_axes import MeshView
+from repro.dist.placement import plan_engine_placement
+from repro.models import lm
+from repro.models.config import ATTN_KV_FAMILIES, PAGED_FAMILIES
+from repro.runtime.cluster import (
+    DisaggCluster,
+    FleetCluster,
+    SloPolicy,
+    StepCostModel,
+    TrafficSpec,
+    measured_role_rates,
+    synthesize,
+)
+from repro.runtime.kv_pool import choose_block_tokens
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="serve the reduced config (costs still calibrate "
+                         "to the full-size arch)")
+    ap.add_argument("--mode", choices=["single", "fleet", "disagg"],
+                    default="fleet")
+    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--policy", choices=["least-loaded", "affinity"],
+                    default="least-loaded")
+    ap.add_argument("--split", default="",
+                    help="disagg role split 'P,D'; empty = GALS-ratio "
+                         "provisioning from measured rates")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--arrival-rate", type=float, default=2000.0,
+                    help="Poisson arrivals per virtual second")
+    ap.add_argument("--session-reuse", type=float, default=0.3)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="0 = sized from the trace's longest request")
+    ap.add_argument("--block-tokens", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--slo-ttft", type=float, default=0.03,
+                    help="TTFT SLO in virtual seconds")
+    ap.add_argument("--slo-tpot", type=float, default=0.002,
+                    help="per-token SLO in virtual seconds")
+    ap.add_argument("--quant", type=int, default=0, choices=[0, 1, 2])
+    ap.add_argument("--json", default="", help="write the SLO report here")
+    return ap
+
+
+def build_cluster(cfg, full_cfg, params, args, spec):
+    cost = StepCostModel.for_config(full_cfg, slots=args.slots)
+    max_len = args.max_len or spec.max_total_tokens + 8
+    block_tokens = args.block_tokens or choose_block_tokens(
+        [spec.max_total_tokens] * spec.n_requests
+    )
+    sampling = lm.SamplingParams(
+        temperature=args.temperature, seed=args.seed
+    )
+    common = dict(
+        slots=args.slots,
+        max_len=max_len,
+        block_tokens=block_tokens,
+        cost=cost,
+        sampling=sampling,
+    )
+    n = 1 if args.mode == "single" else args.engines
+    if args.mode == "disagg":
+        split = None
+        if args.split:
+            p, d = args.split.split(",")
+            split = (int(p), int(d))
+        return DisaggCluster(
+            cfg, params, n_engines=n, spec=spec, split=split,
+            policy=args.policy, **common,
+        )
+    return FleetCluster(
+        cfg, params, n_engines=n, policy=args.policy, **common
+    )
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    try:
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+        full_cfg = get_config(args.arch)
+    except ValueError as e:
+        print(f"[fleet] {e}")
+        return 2
+    if cfg.family not in PAGED_FAMILIES:
+        print(f"[fleet] family {cfg.family!r} has no paged serving path; "
+              "use an attention-KV or hybrid arch")
+        return 2
+    if args.mode == "disagg" and cfg.family not in ATTN_KV_FAMILIES:
+        print(f"[fleet] disaggregation ships KV-block payloads; family "
+              f"{cfg.family!r} cannot hand off decode state")
+        return 2
+    if args.quant:
+        cfg = dataclasses.replace(cfg, w_bits=args.quant)
+        full_cfg = dataclasses.replace(full_cfg, w_bits=args.quant)
+
+    spec = TrafficSpec(
+        n_requests=args.requests,
+        arrival_rate=args.arrival_rate,
+        session_reuse=args.session_reuse,
+        vocab=cfg.vocab,
+        seed=args.seed,
+    )
+    trace = synthesize(spec)
+    params = lm.init_params(cfg, jax.random.key(args.seed))
+    try:
+        cluster = build_cluster(cfg, full_cfg, params, args, spec)
+    except ValueError as e:
+        print(f"[fleet] {e}")
+        return 2
+
+    n = len(cluster.engines)
+    if args.mode == "disagg":
+        rates = measured_role_rates(
+            StepCostModel.for_config(full_cfg, slots=args.slots), spec,
+            slots=args.slots,
+        )
+        print(
+            f"[fleet] GALS rates: rho_p {rates.prefill_req_rate:.0f} req/s, "
+            f"rho_d {rates.decode_req_rate:.0f} req/s, R_F {rates.r_f:.2f} "
+            f"-> split {cluster.split[0]} prefill : {cluster.split[1]} decode"
+            + (" (forced)" if args.split else " (Eq. 2 provisioned)")
+        )
+    # production placement of the engines over the single-pod mesh view
+    view = MeshView(("data", "model"), (16, 16))
+    try:
+        for pl in plan_engine_placement(view, n):
+            print(f"[fleet] {pl.describe()}")
+    except ValueError as e:
+        print(f"[fleet] placement: {e}")
+
+    result = cluster.run(trace)
+    report = result.report(
+        SloPolicy(ttft=args.slo_ttft, tpot=args.slo_tpot)
+    )
+    r = report.row()
+    print(
+        f"[fleet/{args.mode}] {n} engines, {r['completed']}/"
+        f"{r['n_requests']} requests, {r['generated_tokens']} tokens in "
+        f"{r['makespan']*1e3:.1f} virtual ms "
+        f"({r['throughput_tokens_per_s']:.0f} tok/s, goodput "
+        f"{r['goodput_tokens_per_s']:.0f} tok/s, {r['slo_met']} in-SLO)"
+    )
+    print(
+        f"[fleet/{args.mode}] TTFT p50/p95/p99 {r['ttft_p50']*1e3:.1f}/"
+        f"{r['ttft_p95']*1e3:.1f}/{r['ttft_p99']*1e3:.1f} ms, "
+        f"TPOT p50/p99 {r['tpot_p50']*1e3:.2f}/{r['tpot_p99']*1e3:.2f} ms"
+    )
+    for s in result.engine_summaries:
+        print(
+            f"[fleet]   engine {s['engine']} ({s['role']}): "
+            f"{s['completed']} done, {s['handoffs']} handoffs, "
+            f"{s['prefill_tokens']} prefill tokens, "
+            f"{s['decode_steps']} decode steps, clock {s['clock_s']*1e3:.1f} ms"
+        )
+    if args.json:
+        payload = {
+            "mode": args.mode,
+            "engines": n,
+            "policy": args.policy,
+            "split": list(getattr(cluster, "split", ()) or ()),
+            "report": r,
+            "engine_summaries": result.engine_summaries,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"[fleet] wrote {args.json}")
+    ok = report.completed == spec.n_requests
+    if not ok:
+        print(f"[fleet] INCOMPLETE: {report.completed}/{spec.n_requests}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

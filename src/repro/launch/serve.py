@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import lm
-from repro.models.config import ATTN_KV_FAMILIES, PACKING_FAMILIES
+from repro.models.config import PACKING_FAMILIES, PAGED_FAMILIES
 from repro.runtime.kv_pool import KVPool, choose_block_tokens
 from repro.runtime.scheduler import Scheduler
 from repro.runtime.steps import make_serve_step
@@ -273,9 +273,10 @@ def main(argv=None) -> int:
         else:
             cfg = dataclasses.replace(cfg, w_bits=args.quant)
     engine = args.engine
-    if engine == "pool" and cfg.family not in ATTN_KV_FAMILIES:
+    if engine == "pool" and cfg.family not in PAGED_FAMILIES:
         print(f"[serve] family {cfg.family!r} keeps fixed-size per-slot "
-              "decode state; using the fixed-batch engine")
+              "decode state and holds no KV rows; using the fixed-batch "
+              "engine")
         engine = "fixed"
     if args.vmem_budget and engine == "fixed":
         # the fixed loop has no budgeted decode path; failing loudly beats

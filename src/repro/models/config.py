@@ -27,6 +27,18 @@ def pad_to(x: int, m: int) -> int:
 # ssm/hybrid keep fixed-size per-slot state; encdec has its own decoder.
 ATTN_KV_FAMILIES = ("dense", "vlm", "moe")
 
+# Families the KV-pool serving path covers. Hybrid joins the attention-KV
+# families: its shared attention blocks hold a growing KV cache (one per
+# super-block) that pages through the pool, while the SSM conv/state stays
+# fixed-size resident per decode lane (lm.decode_step_paged_hybrid).
+PAGED_FAMILIES = ATTN_KV_FAMILIES + ("hybrid",)
+
+# Families whose prompts can prefill in budget-sized chunks across rounds.
+# MoE is excluded (cross-token capacity routing) and hybrid is excluded
+# (the SSM state is sequential: a chunk would need the carried state of
+# every earlier chunk, which the pool does not hold).
+CHUNKABLE_FAMILIES = ("dense", "vlm")
+
 # Families whose dense FFN stores 1/2-bit weights as packed uint8 carriers
 # when w_bits is set (lm._init_ffn packs every non-expert FFN; MoE expert
 # einsums and SSM blocks have no dense FFN to pack). Packed carriers are
@@ -93,6 +105,17 @@ class ModelConfig:
     @property
     def is_attention_free(self) -> bool:
         return self.family == "ssm"
+
+    @property
+    def n_kv_cache_layers(self) -> int:
+        """Layers that hold a growing KV cache: every layer for the
+        attention families, one per super-block for hybrid (the shared
+        attention block), none for pure SSM."""
+        if self.family == "hybrid":
+            return self.n_layers // max(1, self.hybrid_attn_every)
+        if self.family in ATTN_KV_FAMILIES or self.family == "encdec":
+            return self.n_layers
+        return 0
 
     @property
     def supports_long_context(self) -> bool:

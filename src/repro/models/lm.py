@@ -373,8 +373,27 @@ def _ffn_block_streamed(lp, cfg: ModelConfig, x, depth: int):
     return x + y, jnp.zeros((), jnp.float32)
 
 
+def _conv_tail(u: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Last ``k-1`` pre-conv inputs of a (B, S, C) sequence, left-padded
+    with zeros when the sequence is shorter — exactly the decode-time
+    ``conv_decode_step`` buffer after the sequence has been consumed."""
+    b, s, c = u.shape
+    tail = u[:, max(0, s - (k - 1)):]
+    pad = (k - 1) - tail.shape[1]
+    if pad > 0:
+        tail = jnp.concatenate(
+            [jnp.zeros((b, pad, c), u.dtype), tail], axis=1
+        )
+    return tail
+
+
 def _ssm_block(lp, cfg: ModelConfig, x, state=None, conv_bufs=None):
-    """Mamba2 block. Train path (state None) or decode path (state given)."""
+    """Mamba2 block. Train path (state None) or decode path (state given).
+
+    Both paths return ``(x_out, new_state, new_bufs)``: the train path's
+    state/bufs are the *post-sequence* decode state (final SSD state +
+    trailing pre-conv inputs), which is what lets a full-sequence prefill
+    hand a request straight to the per-token decode recurrence."""
     b = x.shape[0]
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     z = dense(h, lp["in_z"])
@@ -385,6 +404,10 @@ def _ssm_block(lp, cfg: ModelConfig, x, state=None, conv_bufs=None):
         dense(h, lp["in_dt"]).astype(jnp.float32) + lp["dt_bias"]
     )
     if state is None:
+        k = cfg.conv_kernel
+        new_bufs = (
+            _conv_tail(xi, k), _conv_tail(bi, k), _conv_tail(ci, k)
+        )
         xi = ssm_lib.causal_conv(xi, lp["conv_x"])
         bi = ssm_lib.causal_conv(bi, lp["conv_b"])
         ci = ssm_lib.causal_conv(ci, lp["conv_c"])
@@ -394,7 +417,6 @@ def _ssm_block(lp, cfg: ModelConfig, x, state=None, conv_bufs=None):
             xh, dt, lp["a_log"], bi, ci, lp["d_skip"], cfg.ssm_chunk
         )
         y = y.reshape(b, s, cfg.d_inner)
-        new_bufs = None
     else:
         cx, cb, cc = conv_bufs
         xi1, cx = ssm_lib.conv_decode_step(cx, xi[:, 0], lp["conv_x"])
@@ -904,6 +926,165 @@ def prefill_chunk_paged(
     x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     return unembed_logits(x_last, table, cfg.vocab), pks, pvs
+
+
+# --------------------------------------------------------------------------
+# Hybrid (Zamba2) paged serving: shared-attention KV pages through the
+# pool, SSM conv/state stays resident per decode lane
+# --------------------------------------------------------------------------
+
+
+def init_ssm_lane_state(cfg: ModelConfig, slots: int) -> dict:
+    """Per-lane resident SSM decode state for the hybrid paged scheduler.
+
+    Unlike the attention KV cache, this state is fixed-size per lane (the
+    SSD recurrence is O(1) in sequence length), so it never pages: leaves
+    are (L, slots, ...) and a lane's slice is overwritten on admission.
+    """
+    dt = _dt(cfg)
+    l, k = cfg.n_layers, cfg.conv_kernel
+    return {
+        "ssm": jnp.zeros(
+            (l, slots, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        "conv_x": jnp.zeros((l, slots, k - 1, cfg.d_inner), dt),
+        "conv_b": jnp.zeros((l, slots, k - 1, cfg.ssm_state), dt),
+        "conv_c": jnp.zeros((l, slots, k - 1, cfg.ssm_state), dt),
+    }
+
+
+def prefill_with_cache_hybrid(
+    params: dict, cfg: ModelConfig, tokens: jnp.ndarray, last_idx: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, dict]:
+    """Hybrid full-sequence prefill keeping *both* kinds of decode state.
+
+    tokens: (B, S) prompts — hybrid prompts must be **unpadded** (the
+    final SSD state integrates every position, so padded tails would
+    pollute it; the scheduler prefills hybrids one-trace-per-length like
+    MoE). Returns (next-token logits (B, 1, V), ks, vs stacked
+    (n_super, B, S, n_kv, hd) — the shared attention blocks' KV rows for
+    pool insertion — and the lane-state dict of ``init_ssm_lane_state``
+    leaves shaped (L, B, ...)).
+    """
+    if cfg.family != "hybrid":
+        raise ValueError(
+            f"prefill_with_cache_hybrid: family {cfg.family!r} is not hybrid"
+        )
+    x = embed(tokens, params["embed"], _dt(cfg))
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    every = cfg.hybrid_attn_every
+    n_super = cfg.n_layers // every
+    shaped = jax.tree.map(
+        lambda v: v.reshape((n_super, every) + v.shape[1:]), params["layers"]
+    )
+    shared = params["shared"]
+
+    def super_block(carry, lps):
+        x, aux = carry
+
+        def inner(c, lp):
+            y, st, bufs = _ssm_block(lp, cfg, c)
+            return y, (st, *bufs)
+
+        x, states = jax.lax.scan(inner, x, lps)
+        x, (k, v) = _attn_block(shared, cfg, x, positions, causal=True)
+        x, a = _ffn_block(shared, cfg, x)
+        return (x, aux + a), (states, k, v)
+
+    (x, _), (states, ks, vs) = jax.lax.scan(
+        super_block, (x, jnp.zeros((), jnp.float32)), shaped
+    )
+    sts, cxs, cbs, ccs = states  # leaves (n_super, every, B, ...)
+    merge = lambda v: v.reshape((cfg.n_layers,) + v.shape[2:])
+    lane_state = {
+        "ssm": merge(sts), "conv_x": merge(cxs),
+        "conv_b": merge(cbs), "conv_c": merge(ccs),
+    }
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x_last, table, cfg.vocab), ks, vs, lane_state
+
+
+def decode_step_paged_hybrid(
+    params: dict,
+    cfg: ModelConfig,
+    token: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    row_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    lane_state: dict,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, dict]:
+    """``decode_step_paged`` for the hybrid family.
+
+    The shared attention block of each super-block scatters/gathers its
+    KV rows through the pool (pool_k/pool_v are (n_super, R, n_kv, hd),
+    addressed by the same per-lane ``row_table``/``lengths`` as the
+    attention families), while the SSM recurrence advances the resident
+    per-lane ``lane_state`` (leaves (L, B, ...)). Returns
+    (logits (B, 1, V), new pool_k, new pool_v, new lane_state).
+    """
+    if cfg.family != "hybrid":
+        raise ValueError(
+            f"decode_step_paged_hybrid: family {cfg.family!r} is not hybrid"
+        )
+    x = embed(token, params["embed"], _dt(cfg))
+    b = x.shape[0]
+    s_max = row_table.shape[1]
+    pos_b = lengths[:, None]
+    write_rows = jnp.take_along_axis(
+        row_table, jnp.clip(lengths, 0, s_max - 1)[:, None], axis=1
+    )[:, 0]
+    every = cfg.hybrid_attn_every
+    n_super = cfg.n_layers // every
+    shaped = jax.tree.map(
+        lambda v: v.reshape((n_super, every) + v.shape[1:]), params["layers"]
+    )
+    states = jax.tree.map(
+        lambda v: v.reshape((n_super, every) + v.shape[1:]),
+        (
+            lane_state["ssm"], lane_state["conv_x"],
+            lane_state["conv_b"], lane_state["conv_c"],
+        ),
+    )
+    shared = params["shared"]
+
+    def super_block(x, inp):
+        lps, (sts, cxs, cbs, ccs), pk, pv = inp
+
+        def inner(x, lp_state):
+            lp, st, cx, cb, cc = lp_state
+            x, st, bufs = _ssm_block(
+                lp, cfg, x, state=st, conv_bufs=(cx, cb, cc)
+            )
+            return x, (st, *bufs)
+
+        x, new_states = jax.lax.scan(inner, x, (lps, sts, cxs, cbs, ccs))
+        q, k, v = _decode_qkv(shared, cfg, x, pos_b)
+        pk = pk.at[write_rows].set(k[:, 0])
+        pv = pv.at[write_rows].set(v[:, 0])
+        o = attn.decode_attention(
+            q, pk[row_table], pv[row_table], (lengths + 1)[:, None]
+        )
+        x = x + dense(o.reshape(b, 1, -1), shared["wo"])
+        x, _ = _ffn_block(shared, cfg, x)
+        return x, (new_states, pk, pv)
+
+    x, (new_states, pks, pvs) = jax.lax.scan(
+        super_block, x, (shaped, states, pool_k, pool_v)
+    )
+    sts, cxs, cbs, ccs = new_states
+    merge = lambda v: v.reshape((cfg.n_layers,) + v.shape[2:])
+    new_lane = {
+        "ssm": merge(sts), "conv_x": merge(cxs),
+        "conv_b": merge(cbs), "conv_c": merge(ccs),
+    }
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x, table, cfg.vocab), pks, pvs, new_lane
 
 
 # --------------------------------------------------------------------------

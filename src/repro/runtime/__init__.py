@@ -1,4 +1,9 @@
 from repro.runtime.kv_pool import KVPool  # noqa: F401
-from repro.runtime.scheduler import Request, RequestState, Scheduler  # noqa: F401
+from repro.runtime.scheduler import (  # noqa: F401
+    PrefillHandoff,
+    Request,
+    RequestState,
+    Scheduler,
+)
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
 from repro.runtime.train import TrainLoop, TrainLoopConfig  # noqa: F401

@@ -1,0 +1,48 @@
+"""Multi-engine fleet serving (ISSUE 4).
+
+The single-engine reproduction (``runtime.scheduler`` over
+``runtime.kv_pool``) scales out here: N engine replicas behind a router
+(``cluster.router``), optionally split into prefill and decode roles
+with KV-block handoff and GALS-ratio provisioning (``cluster.disagg``),
+driven by a seed-deterministic synthetic trace with TTFT/TPOT/goodput
+SLO accounting (``cluster.traffic``). Engines run the real model on a
+roofline-calibrated virtual clock (``cluster.engine``), so fleet
+speedups gate in CI as deterministically as token equivalence does.
+"""
+
+from repro.runtime.cluster.disagg import (
+    DisaggCluster,
+    RoleRates,
+    measured_role_rates,
+    provision_split,
+)
+from repro.runtime.cluster.engine import Engine, StepCostModel
+from repro.runtime.cluster.router import FleetCluster, FleetRunResult, Router
+from repro.runtime.cluster.traffic import (
+    ClientRequest,
+    RequestTiming,
+    SloPolicy,
+    SloReport,
+    TrafficSpec,
+    slo_report,
+    synthesize,
+)
+
+__all__ = [
+    "ClientRequest",
+    "DisaggCluster",
+    "Engine",
+    "FleetCluster",
+    "FleetRunResult",
+    "RequestTiming",
+    "RoleRates",
+    "Router",
+    "SloPolicy",
+    "SloReport",
+    "StepCostModel",
+    "TrafficSpec",
+    "measured_role_rates",
+    "provision_split",
+    "slo_report",
+    "synthesize",
+]

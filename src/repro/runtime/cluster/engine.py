@@ -1,0 +1,282 @@
+"""One fleet engine replica: a ``runtime.scheduler.Scheduler`` + KV pool
+behind a virtual clock.
+
+Real tokens, virtual seconds. Every engine runs the actual model (its
+token streams are bit-exact against single-engine serving — the
+acceptance gate), but *time* is charged from a roofline-derived
+``StepCostModel`` so N engines genuinely overlap in virtual time on a
+one-host CI runner, and a trace replays deterministically. The cost
+model is calibrated from a (usually full-size) ``ModelConfig`` against
+the ``perf.roofline`` hardware constants: decode steps are HBM-bound
+(weight re-reads), prefill is MXU-bound per token plus one weight sweep
+per step, and a prefill->decode handoff pays the KV payload over ICI.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import PACKING_FAMILIES, ModelConfig
+from repro.models.lm import SamplingParams
+from repro.perf.roofline import HW, HwModel
+from repro.runtime.kv_pool import KVPool
+from repro.runtime.scheduler import (
+    PrefillHandoff,
+    RequestState,
+    Scheduler,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCostModel:
+    """Virtual-seconds cost of the scheduler's unit operations."""
+
+    prefill_s_per_token: float  # MXU term: 2 * N_active flops / peak
+    prefill_s_per_step: float  # one weight sweep HBM->compute per step
+    decode_s_per_step: float  # one batched decode step (all lanes)
+    handoff_s_per_token: float  # KV rows over the interconnect
+    round_overhead_s: float = 1e-6  # host bookkeeping per round
+
+    @classmethod
+    def for_config(
+        cls, cfg: ModelConfig, *, slots: int, hw: HwModel = HW
+    ) -> "StepCostModel":
+        """Calibrate from a model config (typically the *full-size* arch:
+        the fleet serves the smoke config's real tokens while charging
+        the production arch's time — same trick as the dry-run)."""
+        n_active = cfg.active_params()
+        dt_bytes = jnp.dtype(cfg.dtype).itemsize
+        weight_bytes = n_active * dt_bytes
+        if cfg.w_bits in (1, 2) and cfg.family in PACKING_FAMILIES:
+            # FCMP packing shrinks the dense-FFN re-read traffic (hybrid
+            # has one shared FFN copy, encdec packs both stacks, the rest
+            # one per layer)
+            if cfg.family == "hybrid":
+                copies = 1
+            elif cfg.family == "encdec":
+                copies = cfg.n_layers + cfg.n_enc_layers
+            else:
+                copies = cfg.n_layers
+            ffn = 3 * cfg.d_model * cfg.d_ff * copies * dt_bytes
+            weight_bytes = weight_bytes - ffn + ffn * cfg.w_bits // (
+                8 * dt_bytes
+            )
+        flops_per_token = 2.0 * n_active
+        kv_bytes_per_token = (
+            cfg.n_kv_cache_layers * 2 * cfg.n_kv * cfg.hd * dt_bytes
+        )
+        return cls(
+            prefill_s_per_token=flops_per_token / hw.peak_flops,
+            prefill_s_per_step=weight_bytes / hw.hbm_bw,
+            decode_s_per_step=max(
+                weight_bytes / hw.hbm_bw,
+                flops_per_token * slots / hw.peak_flops,
+            ),
+            handoff_s_per_token=kv_bytes_per_token / hw.ici_bw,
+        )
+
+    def prefill_rate(self, mean_prompt: float) -> float:
+        """Sustained prefill tokens/s at the given mean prompt length."""
+        per_req = (
+            mean_prompt * self.prefill_s_per_token + self.prefill_s_per_step
+        )
+        return mean_prompt / per_req
+
+    def decode_rate(self, slots: int) -> float:
+        """Sustained decode tokens/s with every lane busy."""
+        return slots / self.decode_s_per_step
+
+
+class Engine:
+    """A scheduler replica with a virtual clock and handoff plumbing.
+
+    Roles: ``both`` (a full serve engine), ``prefill`` (admission +
+    prefill only; finished prompts leave through the scheduler's handoff
+    hook as ``PrefillHandoff`` payloads in ``outbox``), ``decode``
+    (adopts payloads from ``offer_import`` and runs their decode lanes).
+    """
+
+    def __init__(
+        self,
+        engine_id: int,
+        cfg: ModelConfig,
+        params,
+        *,
+        slots: int,
+        max_len: int,
+        block_tokens: int,
+        cost: StepCostModel,
+        role: str = "both",
+        token_budget: int | None = None,
+        sampling: SamplingParams | None = None,
+    ):
+        assert role in ("both", "prefill", "decode"), role
+        self.engine_id = engine_id
+        self.cfg = cfg
+        self.role = role
+        self.cost = cost
+        self.clock = 0.0
+        self.drained = False
+        pool = KVPool.for_slots(
+            cfg, slots=slots, max_len=max_len, block_tokens=block_tokens
+        )
+        self.scheduler = Scheduler(
+            cfg,
+            params,
+            pool,
+            slots=slots,
+            max_len=max_len,
+            token_budget=token_budget,
+            sampling=sampling,
+            handoff=self._on_handoff if role == "prefill" else None,
+        )
+        self.outbox: list[tuple[float, PrefillHandoff]] = []
+        self._imports: list[tuple[float, int]] = []  # (ready_at, rid)
+        self._import_payloads: dict[int, PrefillHandoff] = {}
+        self._import_tokens = 0
+        self._charged_prefill_tokens = 0
+        self._out_seen: dict[int, int] = {}
+        # (kind, rid, t) with kind in {"first", "done"}; the cluster drains
+        self.events: list[tuple[str, int, float]] = []
+
+    # ---------------- load / admission ----------------
+
+    @property
+    def queued_tokens(self) -> int:
+        return sum(r.total_tokens for r in self.scheduler.queue) + (
+            self._import_tokens
+        )
+
+    @property
+    def load_tokens(self) -> int:
+        """Committed + queued + pending-import tokens: the router's
+        least-loaded metric."""
+        return self.scheduler.committed_tokens + self.queued_tokens
+
+    def can_accept(self, total_tokens: int) -> bool:
+        if self.drained:
+            return False
+        sched = self.scheduler
+        usable = sched.pool.usable_blocks * sched.pool.block_tokens
+        if total_tokens > min(usable, sched.max_len):
+            return False
+        return self.load_tokens + total_tokens <= sched.token_budget
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, rid: int):
+        self.scheduler.submit(prompt, max_new_tokens, rid=rid)
+
+    def offer_import(self, ready_at: float, payload: PrefillHandoff) -> None:
+        bisect.insort(self._imports, (ready_at, payload.rid))
+        self._import_payloads[payload.rid] = payload
+        self._import_tokens += payload.total_tokens
+
+    def has_work(self) -> bool:
+        return bool(
+            self.scheduler.queue
+            or any(r is not None for r in self.scheduler.active)
+            or self._imports
+        )
+
+    # ---------------- handoff (prefill role) ----------------
+
+    def _on_handoff(self, payload: PrefillHandoff) -> None:
+        """Scheduler hook: charge this prompt's prefill precisely (so
+        per-request TTFT is not round-granular) and stamp the payload's
+        interconnect-ready time."""
+        self.clock += (
+            payload.n_tokens * self.cost.prefill_s_per_token
+            + self.cost.prefill_s_per_step
+        )
+        self._charged_prefill_tokens += payload.n_tokens
+        ready = self.clock + payload.n_tokens * self.cost.handoff_s_per_token
+        self.outbox.append((ready, payload))
+
+    # ---------------- the engine round ----------------
+
+    def _try_imports(self) -> None:
+        while self._imports:
+            ready_at, rid = self._imports[0]
+            if ready_at > self.clock:
+                if not (
+                    self.scheduler.queue
+                    or any(r is not None for r in self.scheduler.active)
+                ):
+                    # nothing else to run: wait for the payload
+                    self.clock = ready_at
+                else:
+                    break
+            payload = self._import_payloads[rid]
+            if not self.scheduler.import_prefilled(payload):
+                break  # no lane/budget yet; decode below frees one
+            self._imports.pop(0)
+            del self._import_payloads[rid]
+            self._import_tokens -= payload.total_tokens
+            req = self.scheduler.requests[rid]
+            self._out_seen[rid] = len(req.output)
+            self.events.append(("first", rid, self.clock))
+            if req.state is RequestState.DONE:
+                # a one-token request finishes at the moment of import
+                self.events.append(("done", rid, self.clock))
+
+    def step_round(self) -> None:
+        """One scheduler round, charged on the virtual clock."""
+        self._try_imports()
+        stats = self.scheduler.stats
+        pt0 = stats.prefill_tokens
+        ps0 = stats.prefill_steps
+        ds0 = stats.decode_steps
+        self._charged_prefill_tokens = 0
+        charged_steps0 = stats.handoffs
+        self.scheduler.round()
+        # handoffs were charged precisely in the hook; the deltas cover
+        # everything else (clamped: a chunked prompt's earlier rounds may
+        # already have charged tokens the hook re-counts)
+        d_tokens = (
+            stats.prefill_tokens - pt0 - self._charged_prefill_tokens
+        )
+        d_steps = (stats.prefill_steps - ps0) - (
+            stats.handoffs - charged_steps0
+        )
+        self.clock += (
+            max(0, d_tokens) * self.cost.prefill_s_per_token
+            + max(0, d_steps) * self.cost.prefill_s_per_step
+            + (stats.decode_steps - ds0) * self.cost.decode_s_per_step
+            + self.cost.round_overhead_s
+        )
+        self._collect_events()
+
+    def _collect_events(self) -> None:
+        for rid, req in self.scheduler.requests.items():
+            n = len(req.output)
+            prev = self._out_seen.get(rid, 0)
+            if prev == 0 and n > 0 and req.state is not RequestState.HANDOFF:
+                self.events.append(("first", rid, self.clock))
+            if req.state is RequestState.DONE and prev < n:
+                self.events.append(("done", rid, self.clock))
+            self._out_seen[rid] = n
+
+    # ---------------- drain ----------------
+
+    def drain(self):
+        """Stop intake and hand queued requests back to the router."""
+        self.drained = True
+        return self.scheduler.drain()
+
+    def summary(self) -> dict:
+        s = self.scheduler.stats
+        return {
+            "engine": self.engine_id,
+            "role": self.role,
+            "clock_s": round(self.clock, 6),
+            "completed": s.completed,
+            "handoffs": s.handoffs,
+            "prefill_steps": s.prefill_steps,
+            "prefill_tokens": s.prefill_tokens,
+            "decode_steps": s.decode_steps,
+            "generated_tokens": s.generated_tokens,
+            "pool_utilization": round(s.steady_state_utilization, 4),
+        }

@@ -1,0 +1,277 @@
+"""Fleet router: policy-driven dispatch over N engine replicas.
+
+The router owns the cluster-global intake queue and dispatches arrivals
+to engines under two policies:
+
+  * ``least-loaded`` — the engine with the fewest committed + queued
+    tokens that can take the request's *full* token commitment (the
+    admission rule is token-budget-aware across engines: a request is
+    never parked on an engine whose budget cannot hold it, so one hot
+    engine cannot hoard the queue while others idle);
+  * ``affinity`` — requests carrying a session id stick to the engine
+    that served the session before (falling back to least-loaded when
+    that engine is full or drained, and re-pinning). Keeping a session's
+    requests co-located is what makes prefix/KV reuse possible at all —
+    the reuse-aware handoff argument of ShortcutFusion (arXiv
+    2106.08167) applied to placement.
+
+Dispatch is FIFO: the head of the backlog blocks until some engine can
+accept it (no starvation, deterministic order). ``drain_engine`` stops
+an engine's intake and requeues its not-yet-admitted requests at the
+front of the backlog; in-flight requests finish where they are. Because
+sampling is keyed on the fleet-global request id, a drained-and-requeued
+request reproduces its exact token stream on the new engine — the
+router invariant the tests pin (no request lost, duplicated, or
+perturbed by a drain).
+
+``FleetCluster`` runs the shared virtual-time event loop (see
+``cluster.engine``): engines advance independent clocks, the loop always
+steps the furthest-behind busy engine, and arrivals are delivered in
+virtual-time order — a deterministic discrete-event simulation whose
+per-token work is the real model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+
+from repro.models.config import ModelConfig
+from repro.models.lm import SamplingParams
+from repro.runtime.cluster.engine import Engine, StepCostModel
+from repro.runtime.cluster.traffic import (
+    ClientRequest,
+    RequestTiming,
+    SloPolicy,
+    SloReport,
+    slo_report,
+)
+from repro.runtime.scheduler import RequestState
+
+
+class Router:
+    """Global intake queue + engine-selection policy."""
+
+    POLICIES = ("least-loaded", "affinity")
+
+    def __init__(self, engines: list[Engine], policy: str = "least-loaded"):
+        if policy not in self.POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; valid: {self.POLICIES}"
+            )
+        self.engines = engines
+        self.policy = policy
+        self.backlog: deque[ClientRequest] = deque()
+        self.affinity: dict[int, int] = {}  # session -> engine_id
+        # rid -> engine ids it was queued on (len > 1 after a drain move)
+        self.assignments: dict[int, list[int]] = {}
+
+    def _fits_somewhere(self, creq: ClientRequest) -> bool:
+        return any(
+            not e.drained
+            and creq.total_tokens
+            <= min(
+                e.scheduler.max_len,
+                e.scheduler.pool.usable_blocks
+                * e.scheduler.pool.block_tokens,
+                e.scheduler.token_budget,
+            )
+            for e in self.engines
+        )
+
+    def offer(self, creq: ClientRequest) -> None:
+        if not self._fits_somewhere(creq):
+            raise ValueError(
+                f"request {creq.rid} needs {creq.total_tokens} tokens; no "
+                "undrained engine can ever hold it"
+            )
+        self.backlog.append(creq)
+
+    def requeue(self, creqs: list[ClientRequest]) -> None:
+        """Put drained requests back at the front, preserving order."""
+        self.backlog.extendleft(reversed(creqs))
+
+    def _pick(self, creq: ClientRequest) -> Engine | None:
+        cands = [e for e in self.engines if e.can_accept(creq.total_tokens)]
+        if not cands:
+            return None
+        if self.policy == "affinity":
+            pinned = self.affinity.get(creq.session)
+            for e in cands:
+                if e.engine_id == pinned:
+                    return e
+        return min(cands, key=lambda e: (e.load_tokens, e.engine_id))
+
+    def dispatch(self) -> int:
+        """Move backlog head(s) onto engines; returns dispatched count."""
+        n = 0
+        while self.backlog:
+            creq = self.backlog[0]
+            engine = self._pick(creq)
+            if engine is None:
+                break  # FIFO: head-of-line waits for budget to free
+            self.backlog.popleft()
+            if not engine.has_work():
+                # an idle engine cannot have started before the arrival
+                engine.clock = max(engine.clock, creq.t_arrival)
+            engine.submit(creq.prompt, creq.max_new_tokens, creq.rid)
+            self.affinity[creq.session] = engine.engine_id
+            self.assignments.setdefault(creq.rid, []).append(
+                engine.engine_id
+            )
+            n += 1
+        return n
+
+
+@dataclasses.dataclass
+class FleetRunResult:
+    """Outputs + virtual-time telemetry of one cluster run."""
+
+    outputs: dict[int, list[int]]
+    timings: dict[int, RequestTiming]
+    engine_summaries: list[dict]
+    assignments: dict[int, list[int]]
+
+    def report(self, slo: SloPolicy) -> SloReport:
+        return slo_report(self.timings, slo)
+
+
+class FleetCluster:
+    """N identical serve engines (prefill + decode each) behind a router."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        n_engines: int,
+        slots: int,
+        max_len: int,
+        block_tokens: int,
+        cost: StepCostModel,
+        policy: str = "least-loaded",
+        token_budget: int | None = None,
+        sampling: SamplingParams | None = None,
+    ):
+        self.cfg = cfg
+        self.engines = [
+            Engine(
+                i,
+                cfg,
+                params,
+                slots=slots,
+                max_len=max_len,
+                block_tokens=block_tokens,
+                cost=cost,
+                role="both",
+                token_budget=token_budget,
+                sampling=sampling,
+            )
+            for i in range(n_engines)
+        ]
+        self.router = Router(self.engines, policy)
+        self.timings: dict[int, RequestTiming] = {}
+        self._by_rid: dict[int, ClientRequest] = {}
+
+    # hooks the disaggregated subclass specialises -----------------------
+
+    def _route_payloads(self) -> None:
+        return None  # no prefill->decode traffic in a symmetric fleet
+
+    def _in_flight(self) -> bool:
+        return False
+
+    # --------------------------------------------------------------------
+
+    def drain_engine(self, engine_id: int) -> list[int]:
+        """Stop an engine's intake; requeue its queued requests. Returns
+        the moved request ids."""
+        engine = next(
+            e for e in self.engines if e.engine_id == engine_id
+        )
+        moved = engine.drain()
+        self.router.requeue([self._by_rid[r.rid] for r in moved])
+        return [r.rid for r in moved]
+
+    def _absorb_events(self, engine: Engine) -> None:
+        for kind, rid, t in engine.events:
+            timing = self.timings[rid]
+            if kind == "first" and math.isnan(timing.t_first):
+                timing.t_first = t
+            elif kind == "done":
+                timing.t_done = t
+        engine.events.clear()
+
+    def run(
+        self,
+        trace: list[ClientRequest],
+        *,
+        drain_at: tuple[int, float] | None = None,
+        max_rounds: int | None = None,
+    ) -> FleetRunResult:
+        """Serve the trace to completion on the virtual clock."""
+        pending = deque(
+            sorted(trace, key=lambda r: (r.t_arrival, r.rid))
+        )
+        self.timings = {
+            r.rid: RequestTiming(r.rid, r.t_arrival) for r in trace
+        }
+        self._by_rid = {r.rid: r for r in trace}
+        limit = max_rounds or 64 + 4 * sum(
+            r.total_tokens for r in trace
+        )
+        rounds = 0
+        drain_pending = drain_at
+        while True:
+            busy = [e for e in self.engines if e.has_work()]
+            t_round = min((e.clock for e in busy), default=math.inf)
+            t_arr = pending[0].t_arrival if pending else math.inf
+            t_evt = min(t_round, t_arr)
+            if drain_pending is not None and t_evt >= drain_pending[1]:
+                self.drain_engine(drain_pending[0])
+                drain_pending = None
+            while pending and pending[0].t_arrival <= t_evt:
+                self.router.offer(pending.popleft())
+            self.router.dispatch()
+            self._route_payloads()
+            busy = [e for e in self.engines if e.has_work()]
+            if not busy:
+                if pending:
+                    continue  # next iteration jumps to the arrival
+                if self.router.backlog or self._in_flight():
+                    raise RuntimeError(
+                        f"cluster stuck: {len(self.router.backlog)} "
+                        "backlogged requests and no engine can accept"
+                    )
+                break
+            engine = min(busy, key=lambda e: (e.clock, e.engine_id))
+            engine.step_round()
+            self._absorb_events(engine)
+            rounds += 1
+            if rounds > limit:
+                raise RuntimeError(
+                    f"cluster failed to drain after {rounds} rounds"
+                )
+        return self._finish()
+
+    def _finish(self) -> FleetRunResult:
+        outputs: dict[int, list[int]] = {}
+        for e in self.engines:
+            e.scheduler.pool.validate()
+            for rid, req in e.scheduler.requests.items():
+                if req.state is RequestState.HANDOFF:
+                    continue  # finished on a decode engine
+                if rid in outputs:
+                    raise AssertionError(
+                        f"request {rid} completed on two engines"
+                    )
+                outputs[rid] = req.output
+        for rid, timing in self.timings.items():
+            timing.n_tokens = len(outputs.get(rid, ()))
+        return FleetRunResult(
+            outputs=outputs,
+            timings=self.timings,
+            engine_summaries=[e.summary() for e in self.engines],
+            assignments=dict(self.router.assignments),
+        )

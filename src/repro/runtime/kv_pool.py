@@ -36,7 +36,7 @@ import numpy as np
 from repro.core.buffers import WeightBuffer
 from repro.core.packing import PackItem, baseline_packing, pack_ffd
 from repro.core.resource_model import RamPrimitive
-from repro.models.config import ATTN_KV_FAMILIES, ModelConfig
+from repro.models.config import PAGED_FAMILIES, ModelConfig
 
 SCRATCH_BLOCK = 0  # block 0 is never allocated; idle slots write/read it
 
@@ -139,10 +139,11 @@ class KVPool:
         block_tokens: int,
         dtype=None,
     ):
-        if cfg.family not in ATTN_KV_FAMILIES:
+        if cfg.family not in PAGED_FAMILIES:
             raise ValueError(
-                f"KVPool serves attention-KV families; got {cfg.family!r} "
-                "(ssm/hybrid decode state is fixed-size per slot)"
+                f"KVPool serves the paged families {PAGED_FAMILIES}; got "
+                f"{cfg.family!r} (pure-ssm decode state is fixed-size per "
+                "slot and holds no KV rows)"
             )
         if n_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is the scratch block)")
@@ -152,7 +153,9 @@ class KVPool:
         self.ram = kv_block_ram(block_tokens)
         dt = jnp.dtype(dtype or cfg.dtype)
         rows = n_blocks * block_tokens
-        shape = (cfg.n_layers, rows, cfg.n_kv, cfg.hd)
+        # hybrid holds one growing KV cache per *shared* attention block
+        # (n_super of them), not per layer
+        shape = (cfg.n_kv_cache_layers, rows, cfg.n_kv, cfg.hd)
         self.k = jnp.zeros(shape, dt)
         self.v = jnp.zeros(shape, dt)
         # block 0 reserved as scratch for idle decode lanes
@@ -294,6 +297,20 @@ class KVPool:
         rows = jnp.asarray(rows)
         self.k = _row_scatter(self.k, rows, ks.astype(self.k.dtype))
         self.v = _row_scatter(self.v, rows, vs.astype(self.v.dtype))
+
+    def export_blocks(
+        self, rid: int, n_tokens: int | None = None
+    ) -> tuple[tuple[int, ...], np.ndarray, np.ndarray]:
+        """Snapshot a request's KV for handoff, serialized in block-id
+        order: returns (block ids, K rows, V rows) with the row payloads
+        shaped (L, n_tokens, n_kv, hd) — rows_of() gathers rows in the
+        order the blocks were allocated, so the ids fully describe the
+        payload layout and a block-granular transport could ship the
+        physical blocks as-is."""
+        ids = tuple(self._held[rid])
+        n = n_tokens if n_tokens is not None else self._tokens[rid]
+        rows = jnp.asarray(self.rows_of(rid)[:n])
+        return ids, np.asarray(self.k[:, rows]), np.asarray(self.v[:, rows])
 
     # ---------------- accounting / reporting ----------------
 

@@ -198,6 +198,16 @@ class RuntimeResidencyPlan:
         return self.resident_block_count / max(1, len(self.blocks))
 
     @property
+    def streamable_bytes_per_step(self) -> float:
+        """Expected HBM bytes per decode step of the *whole* streamable
+        set (every FFN weight block, resident or not) — the baseline the
+        budgeted roofline subtracts pinned blocks from."""
+        return sum(
+            w * b.padded_bytes(self._chip)
+            for b, w in zip(self.blocks, self.read_weights)
+        )
+
+    @property
     def streamed_bytes_per_step(self) -> float:
         """Expected HBM bytes re-read per decode step for cold blocks."""
         res = self.block_resident()
@@ -209,11 +219,9 @@ class RuntimeResidencyPlan:
 
     @property
     def hbm_traffic_reduction(self) -> float:
-        total = sum(
-            w * b.padded_bytes(self._chip)
-            for b, w in zip(self.blocks, self.read_weights)
+        return 1.0 - self.streamed_bytes_per_step / max(
+            1.0, self.streamable_bytes_per_step
         )
-        return 1.0 - self.streamed_bytes_per_step / max(1.0, total)
 
     def layer_stream_mask(self, cfg: ModelConfig) -> tuple[bool, ...]:
         """Per-layer 'FFN is streamed' flags for the executor: a layer

@@ -34,8 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gals import required_rf
-from repro.models.config import ModelConfig
-from repro.models.lm import SamplingParams, sample_logits
+from repro.models.config import CHUNKABLE_FAMILIES, ModelConfig
+from repro.models.lm import (
+    SamplingParams,
+    init_ssm_lane_state,
+    sample_logits,
+)
 from repro.runtime.kv_pool import KVPool
 from repro.runtime.steps import (
     make_chunk_prefill_step,
@@ -53,6 +57,10 @@ def _jitted_prefill(cfg: ModelConfig):
 
 @functools.lru_cache(maxsize=None)
 def _jitted_decode(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        # hybrid signature carries the per-lane SSM state (argnum 6) in
+        # addition to the two pool halves
+        return jax.jit(make_paged_serve_step(cfg), donate_argnums=(2, 3, 6))
     return jax.jit(make_paged_serve_step(cfg), donate_argnums=(2, 3))
 
 
@@ -65,7 +73,38 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"
     DECODE = "decode"
+    HANDOFF = "handoff"  # prefilled here, decoded on another engine
     DONE = "done"
+
+
+@dataclasses.dataclass
+class PrefillHandoff:
+    """A prefilled request leaving a prefill-role engine.
+
+    The KV payload is serialized through the source pool's block ids:
+    ``k``/``v`` hold the request's rows gathered in block order (shape
+    (L, n_tokens, n_kv, hd)), and ``block_ids`` records which physical
+    blocks produced them — the wire format is block-granular, mirroring
+    the allocator, so a zero-copy transport could ship whole blocks.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    first_token: int
+    n_tokens: int
+    block_ids: tuple[int, ...]
+    block_tokens: int
+    k: np.ndarray
+    v: np.ndarray
+
+    @property
+    def kv_bytes(self) -> int:
+        return self.k.nbytes + self.v.nbytes
+
+    @property
+    def total_tokens(self) -> int:
+        return self.n_tokens + self.max_new_tokens
 
 
 @dataclasses.dataclass
@@ -97,7 +136,9 @@ class SchedulerStats:
     completed: int = 0
     generated_tokens: int = 0
     prefill_steps: int = 0
+    prefill_tokens: int = 0
     decode_steps: int = 0
+    handoffs: int = 0
     rounds: int = 0
     ttfts: list[float] = dataclasses.field(default_factory=list)
     util_samples: list[float] = dataclasses.field(default_factory=list)
@@ -135,6 +176,7 @@ class Scheduler:
         sampling: SamplingParams | None = None,
         prefill_chunk: int | None = None,
         residency=None,
+        handoff: Callable[[PrefillHandoff], None] | None = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -158,8 +200,21 @@ class Scheduler:
             prefill_chunk or self.token_budget, self.token_budget
         )
         self.residency = residency
+        # prefill-role engines export prefilled KV instead of decoding;
+        # hybrid handoff would also need to ship the SSM lane state, which
+        # the block-id wire format does not carry yet
+        if handoff is not None and cfg.family == "hybrid":
+            raise ValueError(
+                "prefill handoff covers the attention-KV families; hybrid "
+                "SSM lane state does not ship through the KV-block payload"
+            )
+        self.handoff = handoff
         self._prefill = _jitted_prefill(cfg)
-        self._chunk_prefill = _jitted_chunk_prefill(cfg)
+        self._chunk_prefill = (
+            _jitted_chunk_prefill(cfg)
+            if cfg.family in CHUNKABLE_FAMILIES
+            else None
+        )
         if residency is not None:
             from repro.runtime.residency.executor import cached_budgeted_step
 
@@ -167,6 +222,11 @@ class Scheduler:
         else:
             self._decode = _jitted_decode(cfg)
         self._chunk_cursor: dict[int, int] = {}
+        # hybrid: fixed-size per-lane SSM decode state, resident next to
+        # the pool (the pool pages only the shared attention blocks' KV)
+        self._lane_state = (
+            init_ssm_lane_state(cfg, slots) if cfg.family == "hybrid" else None
+        )
         self.queue: deque[Request] = deque()
         self.requests: dict[int, Request] = {}
         self.active: list[int | None] = [None] * slots
@@ -183,7 +243,17 @@ class Scheduler:
 
     # ---------------- submission ----------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        *,
+        rid: int | None = None,
+    ) -> int:
+        """Queue a request. ``rid`` lets a fleet router assign globally
+        unique ids across engines — the sampler is keyed on (seed, rid,
+        position), so a request keeps its exact token stream wherever it
+        lands (and across a drain/requeue)."""
         total = len(prompt) + max_new_tokens
         if len(prompt) < 1 or max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens >= 1")
@@ -199,21 +269,46 @@ class Scheduler:
         # prompts over the admission token budget are legal for chunkable
         # families: they admit solo and prefill in budget-sized chunks
         # across rounds. MoE prompts must prefill in one unpadded shot
-        # (cross-token capacity routing), so the budget stays a hard cap.
-        if total > self.token_budget and self.cfg.family == "moe":
+        # (cross-token capacity routing) and hybrid prompts in one
+        # stateful shot (the SSD state is sequential), so for those the
+        # budget stays a hard cap.
+        if (
+            total > self.token_budget
+            and self.cfg.family not in CHUNKABLE_FAMILIES
+        ):
+            why = (
+                "moe prompts cannot chunk: capacity routing is cross-token"
+                if self.cfg.family == "moe"
+                else f"{self.cfg.family} prompts cannot chunk: the SSM "
+                "state is sequential across chunks"
+            )
             raise ValueError(
                 f"request needs {total} tokens > token budget "
-                f"{self.token_budget} (moe prompts cannot chunk: capacity "
-                "routing is cross-token)"
+                f"{self.token_budget} ({why})"
             )
-        rid = self._next_rid
-        self._next_rid += 1
+        if rid is None:
+            rid = self._next_rid
+        elif rid in self.requests:
+            raise ValueError(f"request id {rid} already known")
+        self._next_rid = max(self._next_rid, rid + 1)
         req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens)
         req.t_submit = time.monotonic()
         req._enter(RequestState.QUEUED)
         self.queue.append(req)
         self.requests[rid] = req
         return rid
+
+    def drain(self) -> list[Request]:
+        """Stop intake: pop and return every not-yet-admitted request so a
+        router can requeue it elsewhere (sampling is rid-keyed, so the
+        token stream survives the move). In-flight prefill/decode
+        requests finish here normally."""
+        out: list[Request] = []
+        while self.queue:
+            req = self.queue.popleft()
+            del self.requests[req.rid]
+            out.append(req)
+        return out
 
     # ---------------- internals ----------------
 
@@ -251,10 +346,14 @@ class Scheduler:
     # ---------------- admission / prefill ----------------
 
     def _start_decode(self, slot: int, req: Request, first: int) -> None:
-        """Move a fully-prefilled request onto its decode lane."""
+        """Move a fully-prefilled request onto its decode lane — or, on a
+        prefill-role engine, export it through the handoff hook instead."""
         req.t_first_token = time.monotonic()
         self.stats.ttfts.append(req.ttft)
         req.output.append(first)
+        if self.handoff is not None:
+            self._export_handoff(slot, req)
+            return
         req._enter(RequestState.DECODE)
         p = len(req.prompt)
         self._token[slot, 0] = first
@@ -263,6 +362,71 @@ class Scheduler:
         self._table_dirty = True
         if len(req.output) >= req.max_new_tokens:
             self._complete(slot)
+
+    def _export_handoff(self, slot: int, req: Request) -> None:
+        """Ship a prefilled request's KV (in block-id order) off-engine
+        and reclaim its lane and blocks immediately."""
+        rid = req.rid
+        p = len(req.prompt)
+        block_ids, ks, vs = self.pool.export_blocks(rid, n_tokens=p)
+        payload = PrefillHandoff(
+            rid=rid,
+            prompt=req.prompt,
+            max_new_tokens=req.max_new_tokens,
+            first_token=req.output[0],
+            n_tokens=p,
+            block_ids=block_ids,
+            block_tokens=self.pool.block_tokens,
+            k=ks,
+            v=vs,
+        )
+        req._enter(RequestState.HANDOFF)
+        self.pool.release(rid)
+        self.active[slot] = None
+        self.stats.handoffs += 1
+        self.handoff(payload)
+
+    def import_prefilled(self, payload: PrefillHandoff) -> bool:
+        """Adopt a request prefilled on another engine: admit its full
+        token commitment, scatter the handed-off KV rows into the pool,
+        and start its decode lane at the next position. Returns False
+        (without side effects) when no lane / budget / pool room is free.
+        """
+        if payload.rid in self.requests:
+            raise ValueError(f"request {payload.rid} already on this engine")
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        total = payload.total_tokens
+        if self.committed_tokens + total > self.token_budget:
+            return False
+        if not self.pool.can_admit(total):
+            return False
+        req = Request(
+            payload.rid,
+            np.asarray(payload.prompt, np.int32),
+            payload.max_new_tokens,
+        )
+        req.t_submit = time.monotonic()
+        req.t_first_token = req.t_submit  # first token arrived with the KV
+        req.output.append(payload.first_token)
+        req._enter(RequestState.DECODE)
+        self.requests[payload.rid] = req
+        self.pool.admit(payload.rid, total)
+        self.pool.write_prefill(
+            payload.rid, payload.k, payload.v, n_tokens=payload.n_tokens
+        )
+        self._next_rid = max(self._next_rid, payload.rid + 1)
+        self.active[slot] = payload.rid
+        self._token[slot, 0] = payload.first_token
+        self._lengths[slot] = payload.n_tokens
+        self._row_table[slot] = self.pool.rows_of(
+            payload.rid, pad_to=self.s_max
+        )
+        self._table_dirty = True
+        if len(req.output) >= req.max_new_tokens:
+            self._complete(slot)
+        return True
 
     def _admit_one(self) -> bool:
         """Admit the head-of-queue request if resources allow.
@@ -290,17 +454,18 @@ class Scheduler:
         self.pool.admit(req.rid, req.total_tokens)
         p = len(req.prompt)
 
-        if self.cfg.family != "moe" and p > self.prefill_chunk:
+        if self.cfg.family in CHUNKABLE_FAMILIES and p > self.prefill_chunk:
             # chunked prefill: reserve the lane now, feed chunks per round
             self.active[slot] = req.rid
             self._chunk_cursor[req.rid] = 0
             self._prefill_one_chunk(slot)
             return True
 
-        if self.cfg.family == "moe":
-            # MoE capacity routing is cross-token: padded positions compete
-            # for per-expert capacity and perturb real tokens' outputs, so
-            # prompts go through prefill unpadded (one trace per length)
+        if self.cfg.family in ("moe", "hybrid"):
+            # MoE capacity routing is cross-token (padded positions compete
+            # for per-expert capacity) and the hybrid SSD state integrates
+            # every position (a padded tail would pollute the handed-over
+            # state), so these prefill unpadded — one trace per length
             bucket = p
         else:
             bucket = max(
@@ -309,9 +474,23 @@ class Scheduler:
             )
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :p] = req.prompt
-        logits, ks, vs = self._prefill(self.params, jnp.asarray(padded), p - 1)
+        if self.cfg.family == "hybrid":
+            logits, ks, vs, lane = self._prefill(
+                self.params, jnp.asarray(padded), p - 1
+            )
+            # the request's post-prompt SSM state moves into its lane slot
+            self._lane_state = jax.tree.map(
+                lambda dst, src: dst.at[:, slot].set(src[:, 0]),
+                self._lane_state,
+                lane,
+            )
+        else:
+            logits, ks, vs = self._prefill(
+                self.params, jnp.asarray(padded), p - 1
+            )
         self.pool.write_prefill(req.rid, ks[:, 0], vs[:, 0], n_tokens=p)
         self.stats.prefill_steps += 1
+        self.stats.prefill_tokens += p
 
         first = self._sample_one(req, np.asarray(logits[0, 0, :]))
         self.active[slot] = req.rid
@@ -345,6 +524,7 @@ class Scheduler:
             jnp.asarray(n - 1, jnp.int32),
         )
         self.stats.prefill_steps += 1
+        self.stats.prefill_tokens += n
         self._chunk_cursor[rid] = c0 + n
         if c0 + n >= p:
             del self._chunk_cursor[rid]
@@ -383,14 +563,25 @@ class Scheduler:
         if self._table_dirty:
             self._row_table_dev = jnp.asarray(self._row_table)
             self._table_dirty = False
-        logits, self.pool.k, self.pool.v = self._decode(
-            self.params,
-            jnp.asarray(self._token),
-            self.pool.k,
-            self.pool.v,
-            self._row_table_dev,
-            jnp.asarray(self._lengths),
-        )
+        if self.cfg.family == "hybrid":
+            logits, self.pool.k, self.pool.v, self._lane_state = self._decode(
+                self.params,
+                jnp.asarray(self._token),
+                self.pool.k,
+                self.pool.v,
+                self._row_table_dev,
+                jnp.asarray(self._lengths),
+                self._lane_state,
+            )
+        else:
+            logits, self.pool.k, self.pool.v = self._decode(
+                self.params,
+                jnp.asarray(self._token),
+                self.pool.k,
+                self.pool.v,
+                self._row_table_dev,
+                jnp.asarray(self._lengths),
+            )
         self.stats.decode_steps += 1
         rows = np.asarray(logits[:, 0, :])
         util = self.pool.stats().utilization

@@ -112,6 +112,20 @@ def make_paged_serve_step(cfg: ModelConfig) -> Callable:
     ``donate_argnums=(2, 3)`` so the pool updates in place.
     """
 
+    if cfg.family == "hybrid":
+        # extended signature: the per-lane SSM state travels with the step
+        # (params, token, pool_k, pool_v, row_table, lengths, lane_state)
+        # -> (logits, pool_k, pool_v, lane_state)
+        def hybrid_step(
+            params, token, pool_k, pool_v, row_table, lengths, lane_state
+        ):
+            return lm.decode_step_paged_hybrid(
+                params, cfg, token, pool_k, pool_v, row_table, lengths,
+                lane_state,
+            )
+
+        return hybrid_step
+
     def step(params, token, pool_k, pool_v, row_table, lengths):
         return lm.decode_step_paged(
             params, cfg, token, pool_k, pool_v, row_table, lengths
@@ -125,8 +139,16 @@ def make_pool_prefill_step(cfg: ModelConfig) -> Callable:
 
     (params, tokens (B, S), last_idx ()) -> (next-token logits (B, 1, V),
     ks, vs stacked (L, B, S, n_kv, hd)). One call fills a request's whole
-    prompt — time-to-first-token is one step, not S serve steps.
+    prompt — time-to-first-token is one step, not S serve steps. The
+    hybrid step additionally returns the per-lane SSM state dict
+    (``lm.prefill_with_cache_hybrid``).
     """
+
+    if cfg.family == "hybrid":
+        def hybrid_step(params, tokens, last_idx):
+            return lm.prefill_with_cache_hybrid(params, cfg, tokens, last_idx)
+
+        return hybrid_step
 
     def step(params, tokens, last_idx):
         return lm.prefill_with_cache(params, cfg, tokens, last_idx)

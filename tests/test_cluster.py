@@ -1,0 +1,342 @@
+"""Fleet serving subsystem (`runtime.cluster`): traffic determinism,
+GALS-ratio provisioning, disaggregated prefill/decode token-identity,
+and router invariants (no request lost, duplicated, or perturbed by an
+engine drain).
+
+The KV-handoff property test drives the scheduler-level hooks directly
+(prefill on engine A through the handoff hook, import on engine B) under
+a hypothesis-swept seed, for both greedy and seeded-sampling decode.
+Cluster-level runs use short traces: every engine executes the real
+model, so trace size is wall-clock."""
+
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config, get_smoke_config
+from repro.dist.mesh_axes import MeshView
+from repro.dist.placement import plan_engine_placement
+from repro.models import lm
+from repro.runtime.cluster import (
+    DisaggCluster,
+    FleetCluster,
+    RoleRates,
+    SloPolicy,
+    StepCostModel,
+    TrafficSpec,
+    provision_split,
+    synthesize,
+)
+from repro.runtime.kv_pool import KVPool
+from repro.runtime.scheduler import RequestState, Scheduler
+
+SLOTS, MAX_LEN, BLOCK = 2, 32, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("smollm_360m")
+    params = lm.init_params(cfg, jax.random.key(0))
+    cost = StepCostModel.for_config(get_config("smollm_360m"), slots=SLOTS)
+    return cfg, params, cost
+
+
+def _spec(cfg, **kw):
+    kw.setdefault("n_requests", 10)
+    kw.setdefault("arrival_rate", 2000.0)
+    kw.setdefault("prompt_lens", ((6, 0.5), (10, 0.5)))
+    kw.setdefault("gen_lens", ((4, 0.5), (8, 0.5)))
+    kw.setdefault("seed", 2)
+    return TrafficSpec(vocab=cfg.vocab, **kw)
+
+
+def _cluster(kind, cfg, params, cost, spec, **kw):
+    common = dict(
+        slots=SLOTS,
+        max_len=MAX_LEN,
+        block_tokens=BLOCK,
+        cost=cost,
+    )
+    common.update(kw)
+    if kind == "disagg":
+        return DisaggCluster(cfg, params, spec=spec, **common)
+    return FleetCluster(cfg, params, **common)
+
+
+# ---------------- traffic generator ----------------
+
+
+def test_traffic_is_seed_deterministic(setup):
+    cfg, _, _ = setup
+    spec = _spec(cfg)
+    a, b = synthesize(spec), synthesize(spec)
+    assert [r.t_arrival for r in a] == [r.t_arrival for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    assert [r.session for r in a] == [r.session for r in b]
+    c = synthesize(dataclasses.replace(spec, seed=3))
+    assert [r.t_arrival for r in a] != [r.t_arrival for r in c]
+    # arrivals are ordered, lengths come from the declared mixes
+    assert all(
+        x.t_arrival <= y.t_arrival for x, y in zip(a, a[1:])
+    )
+    assert {len(r.prompt) for r in a} <= {6, 10}
+    assert {r.max_new_tokens for r in a} <= {4, 8}
+
+
+# ---------------- GALS provisioning ----------------
+
+
+def test_provision_split_follows_eq2_ratio():
+    """The split maximises min(producer, consumer) throughput under the
+    Eq. 2 feasibility ordering: a fast prefill tier concentrates engines
+    on decode, and vice versa."""
+    fast_prefill = RoleRates(prefill_req_rate=300.0, decode_req_rate=100.0)
+    assert provision_split(4, fast_prefill) == (1, 3)  # R_F = 3 feeds 3
+    balanced = RoleRates(prefill_req_rate=100.0, decode_req_rate=100.0)
+    assert provision_split(4, balanced) == (2, 2)
+    fast_decode = RoleRates(prefill_req_rate=100.0, decode_req_rate=300.0)
+    assert provision_split(4, fast_decode) == (3, 1)
+    with pytest.raises(ValueError):
+        provision_split(1, balanced)
+
+
+def test_cost_model_is_roofline_shaped(setup):
+    _, _, cost = setup
+    assert cost.prefill_s_per_token > 0
+    assert cost.decode_s_per_step >= cost.prefill_s_per_step > 0
+    # FCMP packing must shrink the decode step's weight re-read term
+    packed = StepCostModel.for_config(
+        dataclasses.replace(get_config("smollm_360m"), w_bits=1),
+        slots=SLOTS,
+    )
+    assert packed.decode_s_per_step < cost.decode_s_per_step
+
+
+# ---------------- KV handoff property (scheduler-level) ----------------
+
+
+def _mk_sched(cfg, params, **kw):
+    pool = KVPool.for_slots(
+        cfg, slots=SLOTS, max_len=MAX_LEN, block_tokens=BLOCK
+    )
+    return Scheduler(
+        cfg, params, pool, slots=SLOTS, max_len=MAX_LEN, **kw
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_handoff_reproduces_single_engine_stream(setup, seed):
+    """A request prefilled on engine A and decoded on engine B must emit
+    exactly the single-engine token stream — greedy and seeded-sampling."""
+    cfg, params, _ = setup
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(int(rng.integers(3, 9)),)).astype(
+            np.int32
+        )
+        for _ in range(3)
+    ]
+    gen = int(rng.integers(2, 6))
+    for sampling in (
+        None,
+        lm.SamplingParams(temperature=0.8, top_k=16, top_p=0.9, seed=seed),
+    ):
+        kw = {"sampling": sampling} if sampling else {}
+        single = _mk_sched(cfg, params, **kw)
+        for i, p in enumerate(prompts):
+            single.submit(p, gen, rid=i)
+        single.run()
+
+        payloads = []
+        a = _mk_sched(cfg, params, handoff=payloads.append, **kw)
+        b = _mk_sched(cfg, params, **kw)
+        for i, p in enumerate(prompts):
+            a.submit(p, gen, rid=i)
+        while a.queue or any(r is not None for r in a.active):
+            a.round()
+        assert a.stats.handoffs == len(prompts)
+        assert all(
+            r.state is RequestState.HANDOFF for r in a.requests.values()
+        )
+        a.pool.validate()
+        assert a.pool.free_blocks == a.pool.usable_blocks
+        for pl in payloads:
+            # block-id serialization is complete: ids cover the payload
+            assert len(pl.block_ids) * pl.block_tokens >= pl.n_tokens
+            while not b.import_prefilled(pl):
+                b.round()
+        while any(r is not None for r in b.active):
+            b.round()
+        assert b.outputs() == single.outputs()
+
+
+# ---------------- cluster-level equivalence + scaling ----------------
+
+
+def test_fleet_and_disagg_match_single_engine(setup):
+    cfg, params, cost = setup
+    spec = _spec(cfg)
+    trace = synthesize(spec)
+    single = _cluster("fleet", cfg, params, cost, spec, n_engines=1).run(
+        trace
+    )
+    assert all(
+        len(single.outputs[r.rid]) == r.max_new_tokens for r in trace
+    )
+    fleet = _cluster("fleet", cfg, params, cost, spec, n_engines=2).run(
+        trace
+    )
+    disagg = _cluster(
+        "disagg", cfg, params, cost, spec, n_engines=3
+    ).run(trace)
+    assert fleet.outputs == single.outputs
+    assert disagg.outputs == single.outputs
+    # two engines must finish the saturating trace sooner in virtual time
+    mk = lambda r: max(t.t_done for t in r.timings.values())
+    assert mk(fleet) < mk(single)
+    # every request got timed
+    rep = fleet.report(SloPolicy(ttft=1.0, tpot=1.0))
+    assert rep.completed == spec.n_requests == rep.slo_met
+
+
+def test_disagg_packed_arch_token_identity(setup):
+    """The FCMP-packed (w_bits=1) variant holds the same gate."""
+    cfg, _, _ = setup
+    pcfg = dataclasses.replace(cfg, w_bits=1)
+    pparams = lm.init_params(pcfg, jax.random.key(0))
+    cost = StepCostModel.for_config(
+        dataclasses.replace(get_config("smollm_360m"), w_bits=1),
+        slots=SLOTS,
+    )
+    spec = _spec(pcfg, n_requests=6)
+    trace = synthesize(spec)
+    single = _cluster("fleet", pcfg, pparams, cost, spec, n_engines=1).run(
+        trace
+    )
+    disagg = _cluster(
+        "disagg", pcfg, pparams, cost, spec, n_engines=2
+    ).run(trace)
+    assert disagg.outputs == single.outputs
+
+
+def test_disagg_one_token_requests_complete(setup):
+    """Regression: a request whose single token arrives with the handoff
+    (max_new_tokens == 1) finishes at the moment of import and must be
+    timed as completed, not left with t_done unset."""
+    cfg, params, cost = setup
+    spec = _spec(cfg, n_requests=4, gen_lens=((1, 1.0),))
+    trace = synthesize(spec)
+    res = _cluster("disagg", cfg, params, cost, spec, n_engines=2).run(
+        trace
+    )
+    rep = res.report(SloPolicy(ttft=1.0, tpot=1.0))
+    assert rep.completed == 4
+    assert rep.goodput_tokens_per_s > 0
+    assert all(not math.isnan(t.t_done) for t in res.timings.values())
+
+
+def test_disagg_rejects_non_kv_families(setup):
+    _, _, cost = setup
+    hcfg = get_smoke_config("zamba2_2p7b")
+    hparams = lm.init_params(hcfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="wire format"):
+        DisaggCluster(
+            hcfg, hparams, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
+            block_tokens=BLOCK, cost=cost, split=(1, 1),
+        )
+
+
+# ---------------- router invariants ----------------
+
+
+def test_drain_loses_and_duplicates_nothing(setup):
+    """Draining an engine mid-run requeues its queued requests onto the
+    survivors; every request completes exactly once with its exact
+    single-engine token stream."""
+    cfg, params, cost = setup
+    spec = _spec(cfg, n_requests=12)
+    trace = synthesize(spec)
+    single = _cluster("fleet", cfg, params, cost, spec, n_engines=1).run(
+        trace
+    )
+    # a small token budget keeps queues non-empty at drain time, so the
+    # drain actually moves requests
+    total = spec.max_total_tokens
+    cl = _cluster(
+        "fleet", cfg, params, cost, spec, n_engines=2,
+        token_budget=2 * total,
+    )
+    drained = cl.run(trace, drain_at=(0, 0.004))
+    assert cl.engines[0].drained
+    moved = [
+        rid for rid, eids in cl.router.assignments.items() if len(eids) > 1
+    ]
+    assert moved, "drain happened while nothing was queued (test is inert)"
+    assert all(
+        eids[-1] == 1
+        for rid, eids in cl.router.assignments.items()
+        if len(eids) > 1
+    )
+    # exactly-once completion, bit-identical streams (rid-keyed sampling)
+    assert drained.outputs == single.outputs
+    assert sorted(drained.outputs) == [r.rid for r in trace]
+
+
+def test_affinity_keeps_sessions_on_one_engine(setup):
+    """Under light load (no capacity fallback) every request of a session
+    lands on the session's pinned engine."""
+    cfg, params, cost = setup
+    spec = _spec(
+        cfg, n_requests=10, arrival_rate=20.0, session_reuse=0.6, seed=5
+    )
+    trace = synthesize(spec)
+    cl = _cluster(
+        "fleet", cfg, params, cost, spec, n_engines=3, policy="affinity"
+    )
+    res = cl.run(trace)
+    by_session: dict[int, int] = {}
+    for r in trace:
+        eid = cl.router.assignments[r.rid][-1]
+        assert by_session.setdefault(r.session, eid) == eid, (
+            f"session {r.session} split across engines"
+        )
+    # and the streams still match least-loaded routing
+    ll = _cluster("fleet", cfg, params, cost, spec, n_engines=3).run(trace)
+    assert res.outputs == ll.outputs
+
+
+def test_router_rejects_impossible_requests(setup):
+    cfg, params, cost = setup
+    spec = _spec(cfg, n_requests=2)
+    cl = _cluster("fleet", cfg, params, cost, spec, n_engines=2)
+    big = synthesize(spec)[0]
+    big = dataclasses.replace(
+        big, prompt=np.zeros((MAX_LEN,), np.int32), max_new_tokens=8
+    )
+    with pytest.raises(ValueError, match="no undrained engine"):
+        cl.router.offer(big)
+
+
+# ---------------- engine placement over the mesh ----------------
+
+
+def test_engine_placement_slices_batch_axes_only():
+    view = MeshView(("pod", "data", "model"), (2, 16, 16))
+    pls = plan_engine_placement(view, 4)
+    assert [p.axis for p in pls] == ["data"] * 4
+    assert [(p.lo, p.hi) for p in pls] == [(0, 4), (4, 8), (8, 12), (12, 16)]
+    assert all(p.view.shape == {"pod": 2, "data": 4, "model": 16} for p in pls)
+    assert all(p.devices == 128 for p in pls)
+    # 2 engines prefer the largest divisible batch axis
+    assert plan_engine_placement(view, 2)[0].axis == "data"
+    # never split the tensor axis: 32 divides no batch axis here
+    with pytest.raises(ValueError, match="batch axis"):
+        plan_engine_placement(view, 32)
+    with pytest.raises(ValueError):
+        plan_engine_placement(view, 0)

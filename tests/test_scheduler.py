@@ -403,6 +403,86 @@ def test_moe_over_budget_prompt_still_rejected():
         sched.submit(np.zeros(20, np.int32), GEN)
 
 
+# ---------------- hybrid family on the paged pool ----------------
+
+
+def test_hybrid_paged_matches_ring_path():
+    """Zamba-style hybrids serve through the KV pool (ISSUE 4 satellite):
+    the shared attention blocks page their KV while the SSM state stays
+    lane-resident, and the token stream equals the ring-cache decode path
+    replaying the prompt token-by-token."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    assert cfg.family == "hybrid" and cfg.n_kv_cache_layers == 2
+    params = lm.init_params(cfg, jax.random.key(0))
+    prompt = _prompts(1, cfg.vocab, seed=31)[0]
+
+    serve = jax.jit(make_serve_step(cfg))
+    cache = lm.init_cache(cfg, 1, MAX_LEN)
+    for t in range(P):
+        ring_logits, cache = serve(
+            params, jnp.asarray(prompt[None, t : t + 1]), cache
+        )
+    ref = [int(np.argmax(np.asarray(ring_logits[0, 0])))]
+    for _ in range(GEN - 1):
+        ring_logits, cache = serve(
+            params, jnp.asarray(np.array([[ref[-1]]], np.int32)), cache
+        )
+        ref.append(int(np.argmax(np.asarray(ring_logits[0, 0]))))
+
+    pool = KVPool.for_slots(
+        cfg, slots=SLOTS, max_len=MAX_LEN, block_tokens=BLOCK
+    )
+    sched = Scheduler(cfg, params, pool, slots=SLOTS, max_len=MAX_LEN)
+    sched.submit(prompt, GEN)
+    stats = sched.run()
+    assert stats.prefill_steps == 1  # single-shot unpadded prefill
+    assert sched.outputs()[0] == ref
+
+
+def test_hybrid_staggered_lanes_independent():
+    """The staggered-lane invariant holds for hybrids too: lane-resident
+    SSM state and pooled shared-attention KV keep co-residents from
+    perturbing each other."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    prompts = _prompts(3, cfg.vocab, seed=33)
+
+    def outputs_of(schedule):
+        pool = KVPool.for_slots(
+            cfg, slots=SLOTS, max_len=MAX_LEN, block_tokens=BLOCK
+        )
+        sched = Scheduler(cfg, params, pool, slots=SLOTS, max_len=MAX_LEN)
+        for p in schedule:
+            sched.submit(p, GEN)
+        sched.run()
+        return sched.outputs()
+
+    together = outputs_of(prompts)  # 3 requests on 2 slots: req 2 staggers
+    for i, p in enumerate(prompts):
+        assert together[i] == outputs_of([p])[0], f"request {i} diverged"
+
+
+def test_hybrid_over_budget_prompt_rejected():
+    """Hybrid prompts cannot chunk (the SSD state is sequential): the
+    admission budget stays a hard submit-time cap, like MoE."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    pool = KVPool.for_slots(cfg, slots=2, max_len=64, block_tokens=BLOCK)
+    sched = Scheduler(
+        cfg, params, pool, slots=2, max_len=64, token_budget=16
+    )
+    with pytest.raises(ValueError, match="cannot chunk"):
+        sched.submit(np.zeros(20, np.int32), GEN)
+
+
+def test_pool_rejects_pure_ssm_only():
+    """After the hybrid satellite only attention-free ssm is outside the
+    paged path."""
+    ssm = get_smoke_config("mamba2_1p3b")
+    with pytest.raises(ValueError, match="paged families"):
+        KVPool(ssm, n_blocks=9, block_tokens=BLOCK)
+
+
 def test_moe_pool_prefill_is_unpadded():
     """MoE capacity routing is cross-token, so the scheduler must prefill
     moe prompts unpadded: the first generated token equals the argmax of
