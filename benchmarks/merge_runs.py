@@ -2,11 +2,13 @@
 the same identity key. Used to splice re-measured cells into a sweep
 artifact after a targeted fix.
 
-Two record shapes are understood: dry-run cells, keyed
-(arch, shape, mesh, quant, vmem budget), and flat fleet rows as emitted
-in ``benchmarks/fleet_bench.py``'s "rows" list, keyed
-(mode, engines, split, quant). (A ``launch.fleet --json`` report is one
-nested object, not jsonl — flatten it via ``report.load_fleet`` first.)
+Three record shapes are understood: dry-run cells, keyed
+(arch, shape, mesh, quant, vmem budget); flat fleet rows as emitted in
+``benchmarks/fleet_bench.py``'s "rows" list, keyed
+(mode, engines, split, quant); and ``benchmarks/prefix_bench.py`` rows
+(self-identified via ``"bench": "prefix"``), keyed
+(arch, quant, mode). (A ``launch.fleet --json`` report is one nested
+object, not jsonl — flatten it via ``report.load_fleet`` first.)
 
     python benchmarks/merge_runs.py out.jsonl base.jsonl patch1.jsonl ...
 """
@@ -16,6 +18,10 @@ import sys
 
 
 def record_key(r: dict) -> tuple:
+    if r.get("bench") == "prefix":  # a prefix-cache A/B row
+        return (
+            "prefix", r["arch"], r.get("quant", 0), r.get("mode"),
+        )
     if "arch" in r:  # a dry-run cell
         return (
             "dryrun", r["arch"], r["shape"], r["mesh"],

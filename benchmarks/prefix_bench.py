@@ -1,0 +1,219 @@
+"""Prefix-cache benchmark: radix-cached serving vs the cold pool.
+
+A shared-prefix trace (multi-turn sessions whose prompts nest: turn t's
+prompt extends turn t-1's, the chat pattern prefix caching exists for)
+runs twice through the continuous-batching scheduler — once with the
+radix prefix cache attached to the KV pool, once without — for three
+arch variants: dense (smollm_360m smoke), FCMP-packed (w_bits=1), and
+hybrid (zamba2 smoke, whose cache anchors carry the SSM lane state).
+
+Reported per row: prefill tokens actually computed, prompt tokens served
+from cached blocks (hit rate), steady-state pool utilization (Eq.-1
+style, shared physical blocks counted once), peak count of blocks shared
+between live requests, and wall TTFT (informational — wall clock on a CI
+runner is noisy; the band checks are structural).
+
+Band checks (the reproduction gate of ISSUE 5):
+
+  1. cached serving is **exactly** token-identical to cold serving for
+     every variant — greedy and seeded sampling alike share the
+     scheduler's (seed, rid, position)-keyed sampler, so greedy identity
+     here is the full gate;
+  2. the cache cuts prefill tokens by >= 30% on the shared-prefix trace;
+  3. blocks are genuinely shared while requests are co-resident
+     (shared_blocks_peak > 0) and utilization never double-counts a
+     shared block (<= 1.0 at every sampled step).
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/prefix_bench.py --smoke \
+        [--out prefix_bench.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+REDUCTION_FLOOR = 0.30  # prefill-token cut the cache must deliver
+
+BLOCK = 4
+SLOTS = 4
+GEN = 6
+SESSIONS = 3
+TURNS = 4
+TURN_TOKENS = 8  # each turn extends the session prompt by this many
+MAX_LEN = TURNS * TURN_TOKENS + GEN + 2 * BLOCK
+
+
+def _variants():
+    from repro.configs import get_smoke_config
+
+    dense = get_smoke_config("smollm_360m")
+    return (
+        ("smollm_360m", dense),
+        ("smollm_360m", dataclasses.replace(dense, w_bits=1)),
+        ("zamba2_2p7b", get_smoke_config("zamba2_2p7b")),
+    )
+
+
+def _session_waves(vocab: int, seed: int = 0):
+    """TURNS waves of 2 * SESSIONS prompts: per session, wave t carries
+    the nested turn prompt (wave t-1's plus TURN_TOKENS fresh tokens)
+    *and* a sibling branch sharing all but its last 3 tokens — the
+    branched-turn / parallel-sampling pattern. Siblings admit right
+    after their turn prompt commits, so live requests genuinely alias
+    blocks; 3 is coprime to the block size, so siblings diverge
+    *mid-block* and the dense match path exercises copy-on-write."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    fresh = lambda n: rng.integers(0, vocab, size=(n,)).astype(np.int32)
+    prompts = [fresh(TURN_TOKENS) for _ in range(SESSIONS)]
+    waves = []
+    for t in range(TURNS):
+        if t:
+            prompts = [
+                np.concatenate([p, fresh(TURN_TOKENS)]) for p in prompts
+            ]
+        wave = []
+        for p in prompts:
+            sibling = np.concatenate([p[:-3], fresh(3)])
+            wave.extend([p, sibling])
+        waves.append(wave)
+    return waves
+
+
+def _serve(cfg, params, waves, cached: bool) -> dict:
+    import numpy as np
+
+    from repro.runtime.kv_pool import KVPool
+    from repro.runtime.prefix_cache import PrefixCache
+    from repro.runtime.scheduler import Scheduler
+
+    pool = KVPool.for_slots(
+        cfg, slots=SLOTS, max_len=MAX_LEN, block_tokens=BLOCK
+    )
+    cache = PrefixCache(pool) if cached else None
+    sched = Scheduler(
+        cfg, params, pool, slots=SLOTS, max_len=MAX_LEN, prefix_cache=cache
+    )
+    t0 = time.monotonic()
+    util_ok = True
+    for wave in waves:
+        for p in wave:
+            sched.submit(p, GEN)
+        # drive rounds by hand so pool stats are sampled mid-flight
+        while sched.queue or any(r is not None for r in sched.active):
+            sched.round()
+            util_ok &= sched.pool.stats().utilization <= 1.0 + 1e-9
+    dt = time.monotonic() - t0
+    pool.validate()
+    st = sched.stats
+    return {
+        "outputs": sched.outputs(),
+        "prefill_tokens": st.prefill_tokens,
+        "prefix_hits": st.prefix_hits,
+        "prefix_hit_tokens": st.prefix_hit_tokens,
+        "hit_rate": round(st.prefix_hit_rate, 4),
+        "mean_ttft_ms": round(st.mean_ttft * 1e3, 3),
+        "pool_utilization": round(st.steady_state_utilization, 4),
+        "shared_blocks_peak": st.shared_blocks_peak,
+        "cached_blocks": pool.cached_blocks,
+        "util_ok": util_ok,
+        "wall_s": round(dt, 3),
+        "completed": st.completed,
+    }
+
+
+def run() -> list[dict]:
+    import jax
+
+    from repro.models import lm
+
+    rows = []
+    for arch, cfg in _variants():
+        params = lm.init_params(cfg, jax.random.key(0))
+        waves = _session_waves(cfg.vocab, seed=3)
+        cold = _serve(cfg, params, waves, cached=False)
+        warm = _serve(cfg, params, waves, cached=True)
+        identical = warm.pop("outputs") == cold.pop("outputs")
+        reduction = 1.0 - warm["prefill_tokens"] / max(
+            1, cold["prefill_tokens"]
+        )
+        for mode, m in (("nocache", cold), ("cache", warm)):
+            rows.append(
+                {
+                    "bench": "prefix",
+                    "arch": arch,
+                    "family": cfg.family,
+                    "quant": cfg.w_bits,
+                    "mode": mode,
+                    **m,
+                    "prefill_reduction": (
+                        round(reduction, 4) if mode == "cache" else 0.0
+                    ),
+                    "token_identical": identical,
+                }
+            )
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    cache_rows = [r for r in rows if r["mode"] == "cache"]
+    if len(cache_rows) != 3:
+        return [f"expected 3 cached variants, got {len(cache_rows)}"]
+    for r in rows:
+        tag = f"{r['arch']}/q{r['quant']}/{r['mode']}"
+        if r["completed"] != 2 * SESSIONS * TURNS:
+            errs.append(f"{tag}: {r['completed']} completed")
+        if not r["util_ok"]:
+            errs.append(f"{tag}: utilization exceeded 1.0 (double-counted "
+                        "shared blocks)")
+    for r in cache_rows:
+        tag = f"{r['arch']}/q{r['quant']}"
+        if not r["token_identical"]:
+            errs.append(f"{tag}: cached tokens diverged from cold serving")
+        if r["prefill_reduction"] < REDUCTION_FLOOR:
+            errs.append(
+                f"{tag}: prefill cut only {r['prefill_reduction']*100:.0f}% "
+                f"(< {REDUCTION_FLOOR*100:.0f}%)"
+            )
+        if r["prefix_hits"] == 0 or r["prefix_hit_tokens"] == 0:
+            errs.append(f"{tag}: the shared-prefix trace never hit the cache")
+        if r["shared_blocks_peak"] == 0:
+            errs.append(f"{tag}: no blocks were ever shared between requests")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CPU cell (the only cell this bench runs)")
+    ap.add_argument("--out", default="prefix_bench.json")
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        print("[prefix_bench] only the reduced --smoke cell is implemented "
+              "(full-size serving needs real accelerators); pass --smoke")
+        return 2
+    rows = run()
+    errs = check(rows)
+    keys = list(rows[0])
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    for e in errs:
+        print(f"  BAND-CHECK FAIL: {e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "failures": errs}, f, indent=2)
+        print(f"[prefix_bench] wrote {args.out}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

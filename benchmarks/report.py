@@ -120,16 +120,65 @@ def fleet_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def prefix_table(rows: list[dict]) -> str:
+    """Render ``benchmarks/prefix_bench.py`` rows: prefill-token cuts and
+    block-sharing telemetry of the radix prefix cache A/B."""
+    lines = [
+        "| arch | quant | mode | prefill tokens | hit rate | cut | shared blocks peak | cached | TTFT ms | utilization | tokens exact |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        # prefix rows self-identify; a merged jsonl may interleave
+        # dry-run/fleet records, which lack the fields formatted below
+        if r.get("bench") != "prefix":
+            continue
+        lines.append(
+            "| {arch} | {q} | {mode} | {pt} | {hr:.1%} | {cut} | {sb} | "
+            "{cb} | {ttft:.1f} | {util:.3f} | {tok} |".format(
+                arch=r["arch"], q=r.get("quant", 0), mode=r["mode"],
+                pt=r["prefill_tokens"], hr=r.get("hit_rate", 0.0),
+                cut=(
+                    f"{r['prefill_reduction']:.1%}"
+                    if r.get("mode") == "cache"
+                    and r.get("prefill_reduction") is not None
+                    else "—"
+                ),
+                sb=r.get("shared_blocks_peak", 0),
+                cb=r.get("cached_blocks", 0),
+                ttft=r.get("mean_ttft_ms", 0.0),
+                util=r.get("pool_utilization", 0.0),
+                tok="yes" if r.get("token_identical") else "NO",
+            )
+        )
+    return "\n".join(lines)
+
+
+def _load_rows(path: str) -> list[dict] | dict:
+    """A single JSON document -> as parsed; a jsonl of flat records ->
+    list (a jsonl's first line parses but leaves extra data, so the
+    whole-document parse failing is the jsonl signal)."""
+    with open(path) as fh:
+        text = fh.read()
+    try:
+        return json.loads(text)
+    except json.JSONDecodeError:
+        return [json.loads(l) for l in text.splitlines() if l.strip()]
+
+
+def load_prefix(path: str) -> list[dict]:
+    """Prefix rows from the bench JSON ({"rows": [...]}) or a merged
+    jsonl of flat row records."""
+    data = _load_rows(path)
+    return data["rows"] if isinstance(data, dict) else data
+
+
 def load_fleet(path: str) -> list[dict]:
     """Fleet rows from the bench JSON ({"rows": [...]}), a single
     ``launch.fleet --json`` report (percentiles nested under "report"),
     or a merged jsonl of flat row records."""
-    with open(path) as fh:
-        head = fh.read(1)
-        fh.seek(0)
-        if head != "{":
-            return [json.loads(l) for l in fh]
-        data = json.load(fh)
+    data = _load_rows(path)
+    if isinstance(data, list):
+        return data
     if "rows" in data:
         return data["rows"]
     return [{
@@ -145,6 +194,8 @@ if __name__ == "__main__":
     which = sys.argv[2] if len(sys.argv) > 2 else "roofline"
     if which == "fleet":
         print(fleet_table(load_fleet(path)))
+    elif which == "prefix":
+        print(prefix_table(load_prefix(path)))
     elif which == "roofline":
         print(roofline_table(load(path)))
     else:

@@ -15,6 +15,7 @@ from benchmarks import (
     fig2_efficiency,
     fleet_bench,
     kernel_bench,
+    prefix_bench,
     residency_bench,
     roofline_table,
     serve_bench,
@@ -36,6 +37,7 @@ BENCHES = [
     ("residency_bench (budgeted weight residency + §V port)", residency_bench),
     ("fleet_bench (multi-engine fleet + disaggregated prefill/decode)",
      fleet_bench),
+    ("prefix_bench (radix prefix cache vs cold KV pool)", prefix_bench),
 ]
 
 

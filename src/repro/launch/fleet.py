@@ -32,7 +32,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.dist.mesh_axes import MeshView
 from repro.dist.placement import plan_engine_placement
 from repro.models import lm
-from repro.models.config import ATTN_KV_FAMILIES, PAGED_FAMILIES
+from repro.models.config import PAGED_FAMILIES, PREFIX_CACHE_FAMILIES
 from repro.runtime.cluster import (
     DisaggCluster,
     FleetCluster,
@@ -54,8 +54,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--mode", choices=["single", "fleet", "disagg"],
                     default="fleet")
     ap.add_argument("--engines", type=int, default=2)
-    ap.add_argument("--policy", choices=["least-loaded", "affinity"],
+    ap.add_argument("--policy",
+                    choices=["least-loaded", "affinity", "prefix-aware"],
                     default="least-loaded")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="per-engine radix prefix caches over the KV pools "
+                         "(--no-prefix-cache disables; moe never caches)")
     ap.add_argument("--split", default="",
                     help="disagg role split 'P,D'; empty = GALS-ratio "
                          "provisioning from measured rates")
@@ -93,6 +98,8 @@ def build_cluster(cfg, full_cfg, params, args, spec):
         block_tokens=block_tokens,
         cost=cost,
         sampling=sampling,
+        prefix_cache=args.prefix_cache
+        and cfg.family in PREFIX_CACHE_FAMILIES,
     )
     n = 1 if args.mode == "single" else args.engines
     if args.mode == "disagg":
@@ -121,14 +128,16 @@ def main(argv=None) -> int:
         print(f"[fleet] family {cfg.family!r} has no paged serving path; "
               "use an attention-KV or hybrid arch")
         return 2
-    if args.mode == "disagg" and cfg.family not in ATTN_KV_FAMILIES:
-        print(f"[fleet] disaggregation ships KV-block payloads; family "
-              f"{cfg.family!r} cannot hand off decode state")
-        return 2
+    # every paged family disaggregates: hybrid handoffs carry the SSM
+    # lane-state snapshot next to the KV-block rows
+    if args.prefix_cache and cfg.family not in PREFIX_CACHE_FAMILIES:
+        print(f"[fleet] note: family {cfg.family!r} cannot prefix-cache "
+              "(moe capacity routing is cross-token); serving uncached")
     if args.quant:
         cfg = dataclasses.replace(cfg, w_bits=args.quant)
         full_cfg = dataclasses.replace(full_cfg, w_bits=args.quant)
 
+    use_prefix = args.prefix_cache and cfg.family in PREFIX_CACHE_FAMILIES
     spec = TrafficSpec(
         n_requests=args.requests,
         arrival_rate=args.arrival_rate,
@@ -182,12 +191,20 @@ def main(argv=None) -> int:
         f"TPOT p50/p99 {r['tpot_p50']*1e3:.2f}/{r['tpot_p99']*1e3:.2f} ms"
     )
     for s in result.engine_summaries:
-        print(
+        line = (
             f"[fleet]   engine {s['engine']} ({s['role']}): "
             f"{s['completed']} done, {s['handoffs']} handoffs, "
             f"{s['prefill_tokens']} prefill tokens, "
             f"{s['decode_steps']} decode steps, clock {s['clock_s']*1e3:.1f} ms"
         )
+        if use_prefix:
+            line += (
+                f", prefix hit rate {s['prefix_hit_rate']*100:.1f}% "
+                f"({s['prefix_hit_tokens']} tokens, "
+                f"{s['shared_blocks_peak']} shared blocks peak, "
+                f"{s['cached_blocks']} cached)"
+            )
+        print(line)
     if args.json:
         payload = {
             "mode": args.mode,

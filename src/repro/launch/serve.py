@@ -27,8 +27,13 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import lm
-from repro.models.config import PACKING_FAMILIES, PAGED_FAMILIES
+from repro.models.config import (
+    PACKING_FAMILIES,
+    PAGED_FAMILIES,
+    PREFIX_CACHE_FAMILIES,
+)
 from repro.runtime.kv_pool import KVPool, choose_block_tokens
+from repro.runtime.prefix_cache import PrefixCache
 from repro.runtime.scheduler import Scheduler
 from repro.runtime.steps import make_serve_step
 
@@ -71,6 +76,9 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
     pool = KVPool.for_slots(
         cfg, slots=args.batch, max_len=args.max_len, block_tokens=block_tokens
     )
+    prefix_cache = None
+    if args.prefix_cache and cfg.family in PREFIX_CACHE_FAMILIES:
+        prefix_cache = PrefixCache(pool)
     return Scheduler(
         cfg,
         params,
@@ -87,6 +95,7 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
         ),
         prefill_chunk=args.prefill_chunk or None,
         residency=build_residency_plan(cfg, args),
+        prefix_cache=prefix_cache,
     )
 
 
@@ -117,6 +126,12 @@ def run_pool_engine(cfg, params, args) -> dict:
         "mean_ttft_s": stats.mean_ttft,
         "pool_utilization": stats.steady_state_utilization,
         "block_tokens": sched.pool.block_tokens,
+        "prefix_cache": sched.prefix_cache is not None,
+        "prefix_hits": stats.prefix_hits,
+        "prefix_hit_tokens": stats.prefix_hit_tokens,
+        "prefix_hit_rate": stats.prefix_hit_rate,
+        "shared_blocks_peak": stats.shared_blocks_peak,
+        "cached_blocks": sched.pool.cached_blocks,
         "residency": (
             sched.residency.summary() if sched.residency is not None else None
         ),
@@ -216,6 +231,12 @@ def run_fixed_engine(cfg, params, args) -> dict:
         "mean_ttft_s": sum(ttft.values()) / len(ttft) if ttft else 0.0,
         "pool_utilization": 0.0,
         "block_tokens": 0,
+        "prefix_cache": False,
+        "prefix_hits": 0,
+        "prefix_hit_tokens": 0,
+        "prefix_hit_rate": 0.0,
+        "shared_blocks_peak": 0,
+        "cached_blocks": 0,
         "outputs": outputs,
     }
 
@@ -240,6 +261,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="prefill chunk size for long prompts; "
                          "0 = the admission token budget")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="radix prefix cache over the KV pool: requests "
+                         "adopt their longest cached prefix's blocks and "
+                         "prefill only the unmatched suffix "
+                         "(--no-prefix-cache disables; moe never caches)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature; 0 = greedy")
     ap.add_argument("--top-k", type=int, default=0,
@@ -303,6 +330,14 @@ def main(argv=None) -> int:
     if m["engine"] == "pool":
         line += f", pool utilization {m['pool_utilization']*100:.1f}%"
     print(line)
+    if m.get("prefix_cache"):
+        print(
+            f"[serve/prefix] {m['prefix_hits']} prefix hits, "
+            f"{m['prefix_hit_tokens']} prompt tokens served from cache "
+            f"(hit rate {m['prefix_hit_rate']*100:.1f}%), "
+            f"{m['shared_blocks_peak']} shared blocks at peak, "
+            f"{m['cached_blocks']} blocks cached at drain"
+        )
     if m.get("residency"):
         r = m["residency"]
         print(

@@ -39,6 +39,14 @@ PAGED_FAMILIES = ATTN_KV_FAMILIES + ("hybrid",)
 # every earlier chunk, which the pool does not hold).
 CHUNKABLE_FAMILIES = ("dense", "vlm")
 
+# Families whose prompt KV can be served out of the radix prefix cache
+# (runtime.prefix_cache): a new request adopts the shared blocks of its
+# longest committed prefix and prefills only the unmatched suffix. MoE is
+# excluded — capacity routing is cross-token, so a suffix-only prefill
+# would perturb real tokens' outputs. Hybrid qualifies because the cache
+# stores an SSM-state anchor next to the shared-attention KV blocks.
+PREFIX_CACHE_FAMILIES = ("dense", "vlm", "hybrid")
+
 # Families whose dense FFN stores 1/2-bit weights as packed uint8 carriers
 # when w_bits is set (lm._init_ffn packs every non-expert FFN; MoE expert
 # einsums and SSM blocks have no dense FFN to pack). Packed carriers are

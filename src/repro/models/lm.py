@@ -373,10 +373,14 @@ def _ffn_block_streamed(lp, cfg: ModelConfig, x, depth: int):
     return x + y, jnp.zeros((), jnp.float32)
 
 
-def _conv_tail(u: jnp.ndarray, k: int) -> jnp.ndarray:
+def _conv_tail(u: jnp.ndarray, k: int, prev: jnp.ndarray | None = None) -> jnp.ndarray:
     """Last ``k-1`` pre-conv inputs of a (B, S, C) sequence, left-padded
     with zeros when the sequence is shorter — exactly the decode-time
-    ``conv_decode_step`` buffer after the sequence has been consumed."""
+    ``conv_decode_step`` buffer after the sequence has been consumed.
+    ``prev`` (B, K-1, C) is the buffer carried in from an earlier chunk
+    of the same sequence (suffix prefill)."""
+    if prev is not None:
+        u = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
     b, s, c = u.shape
     tail = u[:, max(0, s - (k - 1)):]
     pad = (k - 1) - tail.shape[1]
@@ -388,12 +392,15 @@ def _conv_tail(u: jnp.ndarray, k: int) -> jnp.ndarray:
 
 
 def _ssm_block(lp, cfg: ModelConfig, x, state=None, conv_bufs=None):
-    """Mamba2 block. Train path (state None) or decode path (state given).
+    """Mamba2 block: train path (state None), one-token decode path
+    (state given, S == 1), or sequence-with-state path (state given,
+    S > 1 — a suffix resumed from a carried SSD state + conv buffers,
+    the prefix-cache / chunked-hybrid prefill case).
 
-    Both paths return ``(x_out, new_state, new_bufs)``: the train path's
-    state/bufs are the *post-sequence* decode state (final SSD state +
-    trailing pre-conv inputs), which is what lets a full-sequence prefill
-    hand a request straight to the per-token decode recurrence."""
+    All paths return ``(x_out, new_state, new_bufs)``: the sequence
+    paths' state/bufs are the *post-sequence* decode state (final SSD
+    state + trailing pre-conv inputs), which is what lets a prefill hand
+    a request straight to the per-token decode recurrence."""
     b = x.shape[0]
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     z = dense(h, lp["in_z"])
@@ -403,18 +410,21 @@ def _ssm_block(lp, cfg: ModelConfig, x, state=None, conv_bufs=None):
     dt = jax.nn.softplus(
         dense(h, lp["in_dt"]).astype(jnp.float32) + lp["dt_bias"]
     )
-    if state is None:
+    if state is None or x.shape[1] > 1:
         k = cfg.conv_kernel
+        cx, cb, cc = conv_bufs if conv_bufs is not None else (None,) * 3
         new_bufs = (
-            _conv_tail(xi, k), _conv_tail(bi, k), _conv_tail(ci, k)
+            _conv_tail(xi, k, cx), _conv_tail(bi, k, cb),
+            _conv_tail(ci, k, cc),
         )
-        xi = ssm_lib.causal_conv(xi, lp["conv_x"])
-        bi = ssm_lib.causal_conv(bi, lp["conv_b"])
-        ci = ssm_lib.causal_conv(ci, lp["conv_c"])
+        xi = ssm_lib.causal_conv(xi, lp["conv_x"], state=cx)
+        bi = ssm_lib.causal_conv(bi, lp["conv_b"], state=cb)
+        ci = ssm_lib.causal_conv(ci, lp["conv_c"], state=cc)
         s = x.shape[1]
         xh = xi.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
         y, new_state = ssm_lib.ssd_chunked(
-            xh, dt, lp["a_log"], bi, ci, lp["d_skip"], cfg.ssm_chunk
+            xh, dt, lp["a_log"], bi, ci, lp["d_skip"], cfg.ssm_chunk,
+            h0=state,
         )
         y = y.reshape(b, s, cfg.d_inner)
     else:
@@ -880,7 +890,10 @@ def prefill_chunk_paged(
     one round with a single huge prefill step. Each chunk attends over the
     request's *already-pooled* prefix (gathered through ``row_table``)
     plus itself, causally — flash attention with ``q_offset = start`` —
-    and scatters its own K/V rows into the pool.
+    and scatters its own K/V rows into the pool. ``start`` doubles as the
+    matched-prefix offset of a prefix-cache hit: the warm path prefills
+    only the unmatched suffix, attending over the adopted shared blocks
+    exactly as it would over its own earlier chunks.
 
     tokens: (B, C) chunk tokens, right-padded; write_rows: (B, C) physical
     pool row per chunk token (scratch row for padding); row_table:
@@ -1085,6 +1098,92 @@ def decode_step_paged_hybrid(
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     return unembed_logits(x, table, cfg.vocab), pks, pvs, new_lane
+
+
+def prefill_suffix_paged_hybrid(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    row_table: jnp.ndarray,
+    write_rows: jnp.ndarray,
+    start: jnp.ndarray,
+    last_idx: jnp.ndarray,
+    lane_state: dict,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, dict]:
+    """Hybrid prefill of a prompt *suffix*, resuming from carried state.
+
+    The prefix-cache warm path for zamba2: positions ``0..start-1`` were
+    served by a cached prefix — their shared-attention KV rows sit in the
+    pool (gathered through ``row_table``) and the SSM recurrence resumes
+    from ``lane_state``, the anchor snapshot taken when the prefix was
+    committed (leaves shaped (L, B, ...) as in ``init_ssm_lane_state``).
+    The suffix's SSD scan seeds ``ssd_chunked`` with the carried state
+    and the causal convs take their left context from the carried conv
+    buffers, so the result is the cold full-prompt prefill's — this is
+    also the machinery chunked hybrid prefill needs (SSD state carried
+    across chunks).
+
+    tokens: (B, C) **unpadded** suffix (hybrid prompts never pad);
+    write_rows: (B, C) physical pool row per suffix token; start: ()
+    position of the suffix's first token; last_idx: () in-suffix index
+    of the prompt's last token. Returns (logits at last_idx (B, 1, V),
+    new pool_k, new pool_v, new lane_state).
+    """
+    if cfg.family != "hybrid":
+        raise ValueError(
+            f"prefill_suffix_paged_hybrid: family {cfg.family!r} is not hybrid"
+        )
+    x = embed(tokens, params["embed"], _dt(cfg))
+    b, c, _ = x.shape
+    positions = start + jnp.arange(c)[None, :]
+    every = cfg.hybrid_attn_every
+    n_super = cfg.n_layers // every
+    shaped = jax.tree.map(
+        lambda v: v.reshape((n_super, every) + v.shape[1:]), params["layers"]
+    )
+    states = jax.tree.map(
+        lambda v: v.reshape((n_super, every) + v.shape[1:]),
+        (
+            lane_state["ssm"], lane_state["conv_x"],
+            lane_state["conv_b"], lane_state["conv_c"],
+        ),
+    )
+    shared = params["shared"]
+
+    def super_block(x, inp):
+        lps, (sts, cxs, cbs, ccs), pk, pv = inp
+
+        def inner(x, lp_state):
+            lp, st, cx, cb, cc = lp_state
+            x, st, bufs = _ssm_block(
+                lp, cfg, x, state=st, conv_bufs=(cx, cb, cc)
+            )
+            return x, (st, *bufs)
+
+        x, new_states = jax.lax.scan(inner, x, (lps, sts, cxs, cbs, ccs))
+        q, k, v = _qkv(shared, cfg, x, positions)
+        pk = pk.at[write_rows].set(k)
+        pv = pv.at[write_rows].set(v)
+        o = attn.chunk_attention(q, pk[row_table], pv[row_table], positions)
+        x = x + dense(o.reshape(b, c, -1), shared["wo"])
+        x, _ = _ffn_block(shared, cfg, x)
+        return x, (new_states, pk, pv)
+
+    x, (new_states, pks, pvs) = jax.lax.scan(
+        super_block, x, (shaped, states, pool_k, pool_v)
+    )
+    sts, cxs, cbs, ccs = new_states
+    merge = lambda v: v.reshape((cfg.n_layers,) + v.shape[2:])
+    new_lane = {
+        "ssm": merge(sts), "conv_x": merge(cxs),
+        "conv_b": merge(cbs), "conv_c": merge(ccs),
+    }
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_logits(x_last, table, cfg.vocab), pks, pvs, new_lane
 
 
 # --------------------------------------------------------------------------

@@ -134,10 +134,17 @@ def causal_conv(
 ):
     """Depthwise causal conv1d. x: (Bt, S, C); w: (K, C).
 
-    Train path pads left; decode path uses ``conv_decode_step``.
+    ``state`` (Bt, K-1, C) holds the trailing pre-conv inputs of an
+    already-consumed prefix (the decode-path conv buffer): when given,
+    the left context comes from it instead of zero padding — this is
+    what lets a suffix prefill resume mid-sequence (prefix-cache hits,
+    chunked hybrid prefill) with the exact cold-start conv windows.
     """
     k = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     # windows: out[t] = sum_j x[t - K + 1 + j] * w[j]
     out = jnp.zeros_like(x, dtype=jnp.float32)
     for j in range(k):

@@ -30,7 +30,8 @@ paper's virtual-port arithmetic.
 
 Decode on engine B of a request prefilled on engine A is token-identical
 to single-engine serving: the payload carries the exact KV rows (in
-block-id order) plus the first sampled token, and sampling is keyed on
+block-id order) plus the first sampled token — and, for hybrids, the
+SSM lane-state snapshot at the prompt end — and sampling is keyed on
 (seed, global rid, position).
 """
 
@@ -40,7 +41,7 @@ import dataclasses
 import math
 
 from repro.core.gals import required_rf
-from repro.models.config import ATTN_KV_FAMILIES, ModelConfig
+from repro.models.config import PAGED_FAMILIES, ModelConfig
 from repro.models.lm import SamplingParams
 from repro.runtime.cluster.engine import Engine, StepCostModel
 from repro.runtime.cluster.router import FleetCluster, Router
@@ -119,8 +120,11 @@ class DisaggCluster(FleetCluster):
         policy: str = "least-loaded",
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
+        prefix_cache: bool = False,
     ):
-        if cfg.family not in ATTN_KV_FAMILIES:
+        # hybrids now disaggregate too: the PrefillHandoff payload carries
+        # the SSM lane-state snapshot next to the KV-block rows
+        if cfg.family not in PAGED_FAMILIES:
             raise ValueError(
                 "disaggregated serving ships KV-block payloads; family "
                 f"{cfg.family!r} decode state does not fit the wire format"
@@ -147,6 +151,7 @@ class DisaggCluster(FleetCluster):
             role=role,
             token_budget=token_budget,
             sampling=sampling,
+            prefix_cache=prefix_cache,
         )
         self.prefill_engines = [mk(i, "prefill") for i in range(n_p)]
         self.decode_engines = [mk(n_p + i, "decode") for i in range(n_d)]

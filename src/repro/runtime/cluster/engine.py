@@ -113,6 +113,7 @@ class Engine:
         role: str = "both",
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
+        prefix_cache: bool = False,
     ):
         assert role in ("both", "prefill", "decode"), role
         self.engine_id = engine_id
@@ -124,6 +125,11 @@ class Engine:
         pool = KVPool.for_slots(
             cfg, slots=slots, max_len=max_len, block_tokens=block_tokens
         )
+        cache = None
+        if prefix_cache:
+            from repro.runtime.prefix_cache import PrefixCache
+
+            cache = PrefixCache(pool)
         self.scheduler = Scheduler(
             cfg,
             params,
@@ -133,6 +139,7 @@ class Engine:
             token_budget=token_budget,
             sampling=sampling,
             handoff=self._on_handoff if role == "prefill" else None,
+            prefix_cache=cache,
         )
         self.outbox: list[tuple[float, PrefillHandoff]] = []
         self._imports: list[tuple[float, int]] = []  # (ready_at, rid)
@@ -165,6 +172,16 @@ class Engine:
         if total_tokens > min(usable, sched.max_len):
             return False
         return self.load_tokens + total_tokens <= sched.token_budget
+
+    def prefix_match_tokens(self, prompt) -> int:
+        """Longest cached-prefix match for a prompt on this engine (0
+        without a cache) — the router's prefix-aware scoring signal."""
+        cache = self.scheduler.prefix_cache
+        if cache is None:
+            return 0
+        return cache.match_tokens(
+            prompt, anchor=(self.cfg.family == "hybrid")
+        )
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int, rid: int):
         self.scheduler.submit(prompt, max_new_tokens, rid=rid)
@@ -276,6 +293,11 @@ class Engine:
             "handoffs": s.handoffs,
             "prefill_steps": s.prefill_steps,
             "prefill_tokens": s.prefill_tokens,
+            "prefix_hits": s.prefix_hits,
+            "prefix_hit_tokens": s.prefix_hit_tokens,
+            "prefix_hit_rate": round(s.prefix_hit_rate, 4),
+            "shared_blocks_peak": s.shared_blocks_peak,
+            "cached_blocks": self.scheduler.pool.cached_blocks,
             "decode_steps": s.decode_steps,
             "generated_tokens": s.generated_tokens,
             "pool_utilization": round(s.steady_state_utilization, 4),

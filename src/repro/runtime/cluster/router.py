@@ -13,7 +13,14 @@ to engines under two policies:
     that engine is full or drained, and re-pinning). Keeping a session's
     requests co-located is what makes prefix/KV reuse possible at all —
     the reuse-aware handoff argument of ShortcutFusion (arXiv
-    2106.08167) applied to placement.
+    2106.08167) applied to placement;
+  * ``prefix-aware`` — engines are scored by how many of the request's
+    prompt tokens their radix prefix cache already holds, weighted by
+    session affinity (the pinned engine's match counts double: its
+    cached blocks are likeliest still hot). The engine with the highest
+    score wins; with no cached prefix anywhere the policy degrades to
+    affinity-then-least-loaded. This is where session affinity starts
+    paying off in *reused blocks*, not just placement.
 
 Dispatch is FIFO: the head of the backlog blocks until some engine can
 accept it (no starvation, deterministic order). ``drain_engine`` stops
@@ -53,7 +60,7 @@ from repro.runtime.scheduler import RequestState
 class Router:
     """Global intake queue + engine-selection policy."""
 
-    POLICIES = ("least-loaded", "affinity")
+    POLICIES = ("least-loaded", "affinity", "prefix-aware")
 
     def __init__(self, engines: list[Engine], policy: str = "least-loaded"):
         if policy not in self.POLICIES:
@@ -96,8 +103,25 @@ class Router:
         cands = [e for e in self.engines if e.can_accept(creq.total_tokens)]
         if not cands:
             return None
-        if self.policy == "affinity":
+        if self.policy in ("affinity", "prefix-aware"):
             pinned = self.affinity.get(creq.session)
+            if self.policy == "prefix-aware":
+                # matched-prefix length x session affinity: the pinned
+                # engine's cached tokens weigh double
+                scored = [
+                    (
+                        e.prefix_match_tokens(creq.prompt)
+                        * (2 if e.engine_id == pinned else 1),
+                        e,
+                    )
+                    for e in cands
+                ]
+                best = max(s for s, _ in scored)
+                if best > 0:
+                    return min(
+                        (e for s, e in scored if s == best),
+                        key=lambda e: (e.load_tokens, e.engine_id),
+                    )
             for e in cands:
                 if e.engine_id == pinned:
                     return e
@@ -153,6 +177,7 @@ class FleetCluster:
         policy: str = "least-loaded",
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
+        prefix_cache: bool = False,
     ):
         self.cfg = cfg
         self.engines = [
@@ -167,6 +192,7 @@ class FleetCluster:
                 role="both",
                 token_budget=token_budget,
                 sampling=sampling,
+                prefix_cache=prefix_cache,
             )
             for i in range(n_engines)
         ]

@@ -10,24 +10,31 @@ compensates with the scheduler's decode/admission interleave. The mapping:
     bin height H_B      -> co-resident requests per pool
     paper Eq. 1         -> ``utilization()`` (held tokens / held rows)
 
+Blocks are **refcounted**: the FCMP move of sharing one physical memory
+between several logical consumers applies to KV too, because identical
+prompt prefixes produce identical KV rows. A request's block table may
+alias blocks held by other requests and/or pinned by the radix prefix
+cache (``runtime.prefix_cache``); a block returns to the free list only
+when its last holder lets go. Shared blocks are read-only for everyone
+but the original writer; a request that must write into a *partially*
+matched block first takes a private copy (``adopt_prefix``'s
+copy-on-write of the tail block). Cached blocks with no live request
+holder are reclaimable: under admission pressure the pool asks its
+attached cache (the ``evictor`` hook) to evict LRU entries.
+
 Block geometry and fragmentation accounting reuse ``core.packing`` /
 ``core.resource_model`` directly: a request's footprint is a
 ``WeightBuffer`` (width 1 "lane", depth = tokens), a pool block is a
 ``RamPrimitive`` with a single legal aspect ratio ``(1, block_tokens)``,
 and ``pack_ffd`` provides the first-fit-decreasing machinery for the
 block-size sweep and the tail-sharing lower bound.
-
-The pool is block-granular and blocks are private to one request (KV rows
-cannot be shared, unlike read-only weights), so physical placement is
-``baseline_packing`` of the request buffers; ``fragmentation_report()``
-also quotes the ``pack_ffd`` bound — what tail-sharing would save — the
-same baseline-vs-packed comparison the paper's Table II makes for BRAM.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import Counter
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +51,13 @@ SCRATCH_BLOCK = 0  # block 0 is never allocated; idle slots write/read it
 # (pool shape, row count); the .at[].set outside jit would copy the pool)
 _row_scatter = jax.jit(
     lambda pool, rows, vals: pool.at[:, rows].set(vals), donate_argnums=(0,)
+)
+
+# copy-on-write block duplication: gather the source block's rows and
+# scatter them into the destination block, in place on the donated pool
+_block_copy = jax.jit(
+    lambda pool, dst, src: pool.at[:, dst].set(pool[:, src]),
+    donate_argnums=(0,),
 )
 
 
@@ -100,14 +114,22 @@ def choose_block_tokens(
 class PoolStats:
     n_blocks: int
     block_tokens: int
-    held_blocks: int
-    held_tokens: int
+    held_blocks: int  # unique physical blocks held by live requests
+    held_tokens: int  # useful rows in them, each physical row counted once
     free_blocks: int
     committed_blocks: int
+    shared_blocks: int = 0  # request-held blocks with > 1 request holder
+    cached_blocks: int = 0  # blocks pinned by the prefix cache
+    evictable_blocks: int = 0  # cached blocks no live request holds
 
     @property
     def utilization(self) -> float:
-        """Serving Eq. 1: useful KV rows / physical rows held."""
+        """Serving Eq. 1: useful KV rows / physical rows held.
+
+        Both terms are per *physical* block — a block shared by N
+        requests contributes its rows once, not N times, so sharing
+        raises effective utilization instead of double-counting it.
+        """
         if self.held_blocks == 0:
             return 1.0
         return self.held_tokens / (self.held_blocks * self.block_tokens)
@@ -118,17 +140,24 @@ class PoolStats:
 
 
 class KVPool:
-    """One contiguous physical KV cache, allocated/freed per request.
+    """One contiguous physical KV cache with refcounted block sharing.
 
     Device side: ``k``/``v`` are (L, n_blocks * block_tokens, n_kv, hd)
     row-addressed arrays (the block is an allocator concept only). Host
-    side: a free-block inventory plus per-request block tables.
+    side: a free-block inventory, per-request block tables that may
+    *alias* each other on shared prefixes, a per-block refcount, and the
+    set of blocks pinned by the attached prefix cache.
 
     Admission reserves a *commitment* (the request's full block need from
     ``blocks_for``) but hands out blocks lazily as tokens arrive, so
     utilization stays high while on-demand growth can never fail:
 
-        invariant:  sum(committed - held) over live requests <= free blocks
+        invariant:  sum(committed - held) over live requests
+                    <= free blocks + evictable cached blocks
+
+    (Shared blocks adopted from the cache count as held without touching
+    the free list, so a prefix hit only *shrinks* a request's residual
+    claim on the free list — the invariant stays conservative.)
     """
 
     def __init__(
@@ -163,6 +192,19 @@ class KVPool:
         self._held: dict[int, list[int]] = {}
         self._tokens: dict[int, int] = {}
         self._committed: dict[int, int] = {}
+        self._refs: dict[int, int] = {}  # block -> live holders (+1 cached)
+        self._cached: set[int] = set()  # blocks pinned by the prefix cache
+        # incremental aggregates so the per-decode-step stats() read is
+        # O(1) instead of rescanning every block table (validate()
+        # cross-checks them against a full recount)
+        self._users: Counter = Counter()  # block -> live *request* holders
+        self._used: dict[int, int] = {}  # block -> deepest row any holder uses
+        self._used_total = 0
+        self._shared = 0  # blocks with > 1 request holder
+        self._evictable = 0  # cached blocks with no request holder
+        # the attached prefix cache's eviction hook: (blocks needed) ->
+        # blocks actually returned to the free list
+        self.evictor: Callable[[int], int] | None = None
 
     @classmethod
     def for_slots(
@@ -198,10 +240,54 @@ class KVPool:
         return len(self._free)
 
     @property
+    def cached_blocks(self) -> int:
+        return len(self._cached)
+
+    @property
+    def evictable_blocks(self) -> int:
+        """Cached blocks no live request holds — reclaimable on demand.
+
+        A cached block with refcount 1 is pinned only by the cache; the
+        radix tree's prefix-chain structure guarantees its whole subtree
+        is equally unheld, so every such block is evictable bottom-up.
+        """
+        return self._evictable
+
+    # ---------------- incremental accounting ----------------
+
+    def _add_user(self, block: int) -> None:
+        self._users[block] += 1
+        if self._users[block] == 2:
+            self._shared += 1
+        if self._users[block] == 1 and block in self._cached:
+            self._evictable -= 1
+
+    def _drop_user(self, block: int) -> None:
+        c = self._users[block] - 1
+        if c == 0:
+            del self._users[block]
+            self._used_total -= self._used.pop(block, 0)
+            if block in self._cached:
+                self._evictable += 1
+        else:
+            self._users[block] = c
+            if c == 1:
+                self._shared -= 1
+
+    def _count_use(self, block: int, rows: int) -> None:
+        old = self._used.get(block, 0)
+        if rows > old:
+            self._used[block] = rows
+            self._used_total += rows - old
+
+    @property
     def outstanding_commitment(self) -> int:
         return sum(
             max(0, self._committed[r] - len(self._held[r])) for r in self._held
         )
+
+    def ref_count(self, block: int) -> int:
+        return self._refs.get(block, 0)
 
     def max_rows(self, max_tokens: int) -> int:
         """Fixed gather width for a serve step admitting <= max_tokens."""
@@ -211,7 +297,8 @@ class KVPool:
 
     def can_admit(self, total_tokens: int) -> bool:
         need = self.blocks_for(total_tokens)
-        return self.free_blocks - self.outstanding_commitment >= need
+        avail = self.free_blocks + self.evictable_blocks
+        return avail - self.outstanding_commitment >= need
 
     def admit(self, rid: int, total_tokens: int) -> None:
         if rid in self._held:
@@ -220,11 +307,24 @@ class KVPool:
             raise RuntimeError(
                 f"pool cannot admit request {rid} "
                 f"({self.blocks_for(total_tokens)} blocks needed, "
-                f"{self.free_blocks - self.outstanding_commitment} uncommitted)"
+                f"{self.free_blocks + self.evictable_blocks - self.outstanding_commitment}"
+                " uncommitted)"
             )
         self._committed[rid] = self.blocks_for(total_tokens)
         self._held[rid] = []
         self._tokens[rid] = 0
+
+    def _pop_free(self) -> int:
+        """Take a block off the free list, evicting cached blocks first
+        when it is empty. Commitment accounting guarantees this succeeds
+        for any in-commitment growth."""
+        if not self._free and self.evictor is not None:
+            self.evictor(1)
+        if not self._free:
+            raise RuntimeError("pool free list empty and nothing evictable")
+        b = self._free.pop()
+        self._refs[b] = 1
+        return b
 
     def ensure_rows(self, rid: int, n_tokens: int) -> None:
         """Grow the request's block list to hold ``n_tokens`` rows."""
@@ -235,20 +335,129 @@ class KVPool:
                     f"request {rid} exceeds its {self._committed[rid]}-block "
                     "commitment"
                 )
-            # commitment accounting guarantees the free list is non-empty
-            held.append(self._free.pop())
+            b = self._pop_free()
+            self._add_user(b)
+            held.append(b)
 
     def note_tokens(self, rid: int, n_tokens: int) -> None:
+        """Record the request's token count (monotone while held: a
+        smaller count than already noted keeps the deeper coverage)."""
         self.ensure_rows(rid, n_tokens)
+        old = self._tokens[rid]
+        if n_tokens <= old:
+            return
         self._tokens[rid] = n_tokens
+        held, t = self._held[rid], self.block_tokens
+        for idx in range(0 if old == 0 else (old - 1) // t,
+                         (n_tokens - 1) // t + 1):
+            self._count_use(held[idx], min(t, n_tokens - idx * t))
+
+    def adopt_prefix(
+        self,
+        rid: int,
+        shared: tuple[int, ...],
+        tail_block: int | None,
+        n_tokens: int,
+    ) -> None:
+        """Alias a matched prefix's blocks into a fresh request's table.
+
+        ``shared`` are the cache's full blocks covering rows
+        ``[0, len(shared) * block_tokens)`` — adopted read-only, refcount
+        bumped. ``tail_block`` (required iff ``n_tokens`` is not
+        block-aligned) holds the partially-matched block: the request
+        will *write* rows ``n_tokens..`` of that block span, so it gets a
+        private **copy-on-write** duplicate instead of an alias — the
+        partial-block-divergence rule that keeps shared rows immutable.
+        Must run right after ``admit``, before any rows are held.
+        """
+        held = self._held[rid]
+        if held or self._tokens[rid]:
+            raise RuntimeError(
+                f"request {rid} must adopt a prefix before holding rows"
+            )
+        t = self.block_tokens
+        if len(shared) != n_tokens // t:
+            raise ValueError(
+                f"{len(shared)} shared blocks cannot cover "
+                f"{n_tokens // t} full blocks of {n_tokens} tokens"
+            )
+        if (tail_block is None) != (n_tokens % t == 0):
+            raise ValueError(
+                f"tail block required iff the matched prefix ({n_tokens} "
+                f"tokens) ends mid-block (block_tokens={t})"
+            )
+        if len(shared) + (tail_block is not None) > self._committed[rid]:
+            raise RuntimeError(
+                f"adopted prefix exceeds request {rid}'s commitment"
+            )
+        for b in shared:
+            if b == SCRATCH_BLOCK or b not in self._refs:
+                raise ValueError(f"cannot adopt unallocated block {b}")
+            self._refs[b] += 1
+            self._add_user(b)
+            held.append(b)
+        if tail_block is not None:
+            if tail_block == SCRATCH_BLOCK or tail_block not in self._refs:
+                raise ValueError(f"cannot adopt unallocated block {tail_block}")
+            new = self._pop_free()
+            src = np.arange(tail_block * t, (tail_block + 1) * t)
+            dst = np.arange(new * t, (new + 1) * t)
+            self.k = _block_copy(self.k, jnp.asarray(dst), jnp.asarray(src))
+            self.v = _block_copy(self.v, jnp.asarray(dst), jnp.asarray(src))
+            self._add_user(new)
+            held.append(new)
+        self.note_tokens(rid, n_tokens)
 
     def release(self, rid: int) -> None:
+        if rid not in self._held:
+            raise ValueError(
+                f"release of unknown request {rid}: it was never admitted "
+                "or was already released (double free) — its blocks are "
+                "not on the free list twice"
+            )
         for b in self._held.pop(rid):
-            self._free.append(b)
+            self._drop_user(b)
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
         del self._tokens[rid], self._committed[rid]
+
+    # ---------------- prefix-cache pinning ----------------
+
+    def retain_cached(self, block: int) -> None:
+        """Pin a block on behalf of the prefix cache (one pin per block)."""
+        if block == SCRATCH_BLOCK or block not in self._refs:
+            raise ValueError(f"cannot cache unallocated block {block}")
+        if block in self._cached:
+            raise ValueError(f"block {block} already cached")
+        self._cached.add(block)
+        self._refs[block] += 1
+
+    def uncache(self, block: int) -> int:
+        """Drop the cache's pin; returns 1 if the block went free, else 0.
+
+        Eviction can never reclaim a block a live request holds: the
+        refcount only reaches zero when no block table references it.
+        """
+        if block not in self._cached:
+            raise ValueError(f"block {block} is not cached")
+        self._cached.remove(block)
+        self._refs[block] -= 1
+        if self._refs[block] == 0:
+            del self._refs[block]
+            self._free.append(block)
+            self._evictable -= 1  # it was cache-only; now it is free
+            return 1
+        return 0
+
+    # ---------------- introspection ----------------
 
     def live_requests(self) -> list[int]:
         return list(self._held)
+
+    def blocks_of(self, rid: int) -> tuple[int, ...]:
+        return tuple(self._held[rid])
 
     def blocks_held(self, rid: int) -> int:
         return len(self._held[rid])
@@ -281,6 +490,9 @@ class KVPool:
     ) -> None:
         """Scatter a prefilled (L, P, n_kv, hd) KV prefix into the pool.
 
+        Cold-path only: the request's blocks must be private (a warm
+        prefix-cache admission writes its suffix through the chunked
+        prefill steps instead, which never touch adopted shared rows).
         ``ks``/``vs`` may be right-padded past ``n_tokens`` (the prefill
         bucket); padded rows land in the scratch block so the jitted
         scatter traces once per bucket size, and the donated pool buffer
@@ -306,7 +518,9 @@ class KVPool:
         shaped (L, n_tokens, n_kv, hd) — rows_of() gathers rows in the
         order the blocks were allocated, so the ids fully describe the
         payload layout and a block-granular transport could ship the
-        physical blocks as-is."""
+        physical blocks as-is. Shared (prefix-cache) blocks export by
+        value like any other: the importing pool allocates its own
+        blocks, so refcounts stay engine-local and intact."""
         ids = tuple(self._held[rid])
         n = n_tokens if n_tokens is not None else self._tokens[rid]
         rows = jnp.asarray(self.rows_of(rid)[:n])
@@ -315,39 +529,78 @@ class KVPool:
     # ---------------- accounting / reporting ----------------
 
     def stats(self) -> PoolStats:
-        held_blocks = sum(len(b) for b in self._held.values())
+        # the per-block aggregates (deepest row any holder uses, holder
+        # counts, shared/evictable tallies) are maintained incrementally
+        # on admit/grow/adopt/release, so this read — which the
+        # scheduler takes every decode step — never rescans block tables
         return PoolStats(
             n_blocks=self.usable_blocks,
             block_tokens=self.block_tokens,
-            held_blocks=held_blocks,
-            held_tokens=sum(self._tokens.values()),
+            held_blocks=len(self._users),
+            held_tokens=self._used_total,
             free_blocks=self.free_blocks,
             committed_blocks=self.outstanding_commitment,
+            shared_blocks=self._shared,
+            cached_blocks=len(self._cached),
+            evictable_blocks=self._evictable,
         )
 
     def validate(self) -> None:
-        """Allocator invariants: partition, no overlap, full accounting."""
-        held = [b for bs in self._held.values() for b in bs]
-        if len(held) != len(set(held)):
-            raise AssertionError("block allocated to two requests")
-        if SCRATCH_BLOCK in held or SCRATCH_BLOCK in self._free:
+        """Allocator invariants: refcounts exact, no free+referenced
+        overlap, free-list uniqueness, full accounting."""
+        if len(self._free) != len(set(self._free)):
+            raise AssertionError("free list holds duplicate blocks")
+        holders: Counter = Counter()
+        for bs in self._held.values():
+            holders.update(bs)
+        referenced = set(holders) | self._cached
+        if SCRATCH_BLOCK in referenced or SCRATCH_BLOCK in self._free:
             raise AssertionError("scratch block entered circulation")
-        if set(held) & set(self._free):
-            raise AssertionError("block simultaneously held and free")
-        if len(held) + len(self._free) != self.usable_blocks:
+        if referenced != set(self._refs):
+            raise AssertionError("refcount keys out of sync with holders")
+        for b in referenced:
+            want = holders[b] + (1 if b in self._cached else 0)
+            if self._refs[b] != want:
+                raise AssertionError(
+                    f"block {b} refcount {self._refs[b]} != {want} holders"
+                )
+        if referenced & set(self._free):
+            raise AssertionError("block simultaneously referenced and free")
+        if len(referenced) + len(self._free) != self.usable_blocks:
             raise AssertionError("blocks leaked")
         for rid, bs in self._held.items():
+            if len(bs) != len(set(bs)):
+                raise AssertionError(f"request {rid} holds a block twice")
             if self._tokens[rid] > len(bs) * self.block_tokens:
                 raise AssertionError(f"request {rid} overflows its blocks")
+        # incremental aggregates must equal a full recount
+        used: dict[int, int] = {}
+        t = self.block_tokens
+        for rid, bs in self._held.items():
+            for i, b in enumerate(bs):
+                r = min(t, max(0, self._tokens[rid] - i * t))
+                used[b] = max(used.get(b, 0), r)
+        if holders != self._users:
+            raise AssertionError("per-block holder counts drifted")
+        if used != {b: r for b, r in self._used.items()} or (
+            sum(used.values()) != self._used_total
+        ):
+            raise AssertionError("per-block row-coverage drifted")
+        if self._shared != sum(1 for n in holders.values() if n > 1):
+            raise AssertionError("shared-block tally drifted")
+        if self._evictable != sum(
+            1 for b in self._cached if self._refs[b] == 1
+        ):
+            raise AssertionError("evictable-block tally drifted")
 
     def fragmentation_report(self) -> dict:
         """Baseline (private blocks) vs the ``pack_ffd`` tail-sharing bound.
 
-        The physical placement is one-request-per-block (KV rows are
-        mutable, unlike the paper's read-only weights), i.e.
-        ``baseline_packing``; FFD with height H_B=4 quotes what packing
-        request tails into shared blocks would save — the serving analog
-        of the paper's baseline-vs-FCMP BRAM comparison.
+        The physical placement treats each request's logical footprint as
+        its own buffer (prefix sharing aside), i.e. ``baseline_packing``;
+        FFD with height H_B=4 quotes what packing request tails into
+        shared blocks would save — the serving analog of the paper's
+        baseline-vs-FCMP BRAM comparison.
         """
         items = [
             PackItem(request_buffer(rid, self._tokens[rid]))

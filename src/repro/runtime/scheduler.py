@@ -34,7 +34,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gals import required_rf
-from repro.models.config import CHUNKABLE_FAMILIES, ModelConfig
+from repro.models.config import (
+    CHUNKABLE_FAMILIES,
+    PREFIX_CACHE_FAMILIES,
+    ModelConfig,
+)
 from repro.models.lm import (
     SamplingParams,
     init_ssm_lane_state,
@@ -43,6 +47,7 @@ from repro.models.lm import (
 from repro.runtime.kv_pool import KVPool
 from repro.runtime.steps import (
     make_chunk_prefill_step,
+    make_hybrid_suffix_prefill_step,
     make_paged_serve_step,
     make_pool_prefill_step,
 )
@@ -69,6 +74,13 @@ def _jitted_chunk_prefill(cfg: ModelConfig):
     return jax.jit(make_chunk_prefill_step(cfg), donate_argnums=(2, 3))
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_hybrid_suffix(cfg: ModelConfig):
+    return jax.jit(
+        make_hybrid_suffix_prefill_step(cfg), donate_argnums=(2, 3, 8)
+    )
+
+
 class RequestState(enum.Enum):
     QUEUED = "queued"
     PREFILL = "prefill"
@@ -86,6 +98,9 @@ class PrefillHandoff:
     (L, n_tokens, n_kv, hd)), and ``block_ids`` records which physical
     blocks produced them — the wire format is block-granular, mirroring
     the allocator, so a zero-copy transport could ship whole blocks.
+    Hybrid requests additionally ship ``lane_state`` — the per-request
+    SSM decode state (leaves (L, 1, ...) as in ``init_ssm_lane_state``)
+    at the prompt end — so zamba2 disaggregates prefill/decode too.
     """
 
     rid: int
@@ -97,10 +112,16 @@ class PrefillHandoff:
     block_tokens: int
     k: np.ndarray
     v: np.ndarray
+    lane_state: dict | None = None
 
     @property
     def kv_bytes(self) -> int:
-        return self.k.nbytes + self.v.nbytes
+        lane = (
+            sum(leaf.nbytes for leaf in jax.tree.leaves(self.lane_state))
+            if self.lane_state is not None
+            else 0
+        )
+        return self.k.nbytes + self.v.nbytes + lane
 
     @property
     def total_tokens(self) -> int:
@@ -136,18 +157,28 @@ class SchedulerStats:
     completed: int = 0
     generated_tokens: int = 0
     prefill_steps: int = 0
-    prefill_tokens: int = 0
+    prefill_tokens: int = 0  # charged for the *unmatched* suffix only
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0  # prompt tokens served from cached blocks
     decode_steps: int = 0
     handoffs: int = 0
     rounds: int = 0
     ttfts: list[float] = dataclasses.field(default_factory=list)
     util_samples: list[float] = dataclasses.field(default_factory=list)
     util_samples_any: list[float] = dataclasses.field(default_factory=list)
+    shared_blocks_peak: int = 0
     decode_time: float = 0.0
 
     @property
     def mean_ttft(self) -> float:
         return sum(self.ttfts) / len(self.ttfts) if self.ttfts else 0.0
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of submitted prompt tokens served from the cache
+        (hit tokens / (hit tokens + prefilled tokens))."""
+        total = self.prefix_hit_tokens + self.prefill_tokens
+        return self.prefix_hit_tokens / total if total else 0.0
 
     @property
     def steady_state_utilization(self) -> float:
@@ -177,6 +208,7 @@ class Scheduler:
         prefill_chunk: int | None = None,
         residency=None,
         handoff: Callable[[PrefillHandoff], None] | None = None,
+        prefix_cache=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -201,19 +233,29 @@ class Scheduler:
         )
         self.residency = residency
         # prefill-role engines export prefilled KV instead of decoding;
-        # hybrid handoff would also need to ship the SSM lane state, which
-        # the block-id wire format does not carry yet
-        if handoff is not None and cfg.family == "hybrid":
-            raise ValueError(
-                "prefill handoff covers the attention-KV families; hybrid "
-                "SSM lane state does not ship through the KV-block payload"
-            )
+        # hybrid payloads additionally carry the SSM lane-state snapshot
         self.handoff = handoff
+        # radix prefix cache (runtime.prefix_cache) over this pool: new
+        # requests adopt their longest cached prefix's blocks and prefill
+        # only the unmatched suffix
+        if prefix_cache is not None:
+            if cfg.family not in PREFIX_CACHE_FAMILIES:
+                raise ValueError(
+                    f"prefix caching covers {PREFIX_CACHE_FAMILIES}; "
+                    f"family {cfg.family!r} cannot prefill a bare suffix "
+                    "(moe capacity routing is cross-token)"
+                )
+            if prefix_cache.pool is not pool:
+                raise ValueError("prefix cache must index this pool")
+        self.prefix_cache = prefix_cache
         self._prefill = _jitted_prefill(cfg)
         self._chunk_prefill = (
             _jitted_chunk_prefill(cfg)
             if cfg.family in CHUNKABLE_FAMILIES
             else None
+        )
+        self._hybrid_suffix = (
+            _jitted_hybrid_suffix(cfg) if cfg.family == "hybrid" else None
         )
         if residency is not None:
             from repro.runtime.residency.executor import cached_budgeted_step
@@ -345,12 +387,40 @@ class Scheduler:
 
     # ---------------- admission / prefill ----------------
 
+    def _lane_snapshot(self, slot: int) -> dict:
+        """Host copy of one lane's SSM state (leaves (L, 1, ...))."""
+        return jax.tree.map(
+            lambda v: np.asarray(v[:, slot : slot + 1]), self._lane_state
+        )
+
+    def _restore_lane(self, slot: int, snapshot: dict) -> None:
+        self._lane_state = jax.tree.map(
+            lambda dst, src: dst.at[:, slot].set(jnp.asarray(src)[:, 0]),
+            self._lane_state,
+            snapshot,
+        )
+
+    def _commit_prefix(self, slot: int, req: Request) -> None:
+        """Index the freshly-prefilled prompt in the radix cache: full
+        blocks become shared nodes; hybrids also anchor the SSM state at
+        the exact prompt end (snapshot taken *before* decode advances
+        it)."""
+        if self.prefix_cache is None:
+            return
+        lane = (
+            self._lane_snapshot(slot) if self.cfg.family == "hybrid" else None
+        )
+        self.prefix_cache.commit(
+            req.prompt, self.pool.blocks_of(req.rid), lane_state=lane
+        )
+
     def _start_decode(self, slot: int, req: Request, first: int) -> None:
         """Move a fully-prefilled request onto its decode lane — or, on a
         prefill-role engine, export it through the handoff hook instead."""
         req.t_first_token = time.monotonic()
         self.stats.ttfts.append(req.ttft)
         req.output.append(first)
+        self._commit_prefix(slot, req)
         if self.handoff is not None:
             self._export_handoff(slot, req)
             return
@@ -379,6 +449,11 @@ class Scheduler:
             block_tokens=self.pool.block_tokens,
             k=ks,
             v=vs,
+            lane_state=(
+                self._lane_snapshot(slot)
+                if self.cfg.family == "hybrid"
+                else None
+            ),
         )
         req._enter(RequestState.HANDOFF)
         self.pool.release(rid)
@@ -402,6 +477,11 @@ class Scheduler:
             return False
         if not self.pool.can_admit(total):
             return False
+        if self.cfg.family == "hybrid" and payload.lane_state is None:
+            raise ValueError(
+                f"hybrid handoff of request {payload.rid} lacks the SSM "
+                "lane state; decode cannot resume from KV rows alone"
+            )
         req = Request(
             payload.rid,
             np.asarray(payload.prompt, np.int32),
@@ -416,6 +496,15 @@ class Scheduler:
         self.pool.write_prefill(
             payload.rid, payload.k, payload.v, n_tokens=payload.n_tokens
         )
+        if self.cfg.family == "hybrid":
+            self._restore_lane(slot, payload.lane_state)
+        if self.prefix_cache is not None:
+            # the imported KV warms this engine's cache too
+            self.prefix_cache.commit(
+                req.prompt,
+                self.pool.blocks_of(payload.rid),
+                lane_state=payload.lane_state,
+            )
         self._next_rid = max(self._next_rid, payload.rid + 1)
         self.active[slot] = payload.rid
         self._token[slot, 0] = payload.first_token
@@ -454,10 +543,32 @@ class Scheduler:
         self.pool.admit(req.rid, req.total_tokens)
         p = len(req.prompt)
 
-        if self.cfg.family in CHUNKABLE_FAMILIES and p > self.prefill_chunk:
-            # chunked prefill: reserve the lane now, feed chunks per round
+        # radix-cache lookup: adopt the longest cached prefix's blocks
+        # (refcount bump; COW for a partially-matched block) and charge
+        # prefill only for the unmatched suffix
+        match = None
+        if self.prefix_cache is not None:
+            match = self.prefix_cache.lookup(
+                req.prompt, anchor=(self.cfg.family == "hybrid")
+            )
+        if match is not None:
+            self.pool.adopt_prefix(
+                req.rid, match.shared, match.tail_block, match.matched
+            )
+            self.stats.prefix_hits += 1
+            self.stats.prefix_hit_tokens += match.matched
+
+        if self.cfg.family == "hybrid" and match is not None:
+            self._prefill_hybrid_suffix(slot, req, match)
+            return True
+
+        if self.cfg.family in CHUNKABLE_FAMILIES and (
+            match is not None or p > self.prefill_chunk
+        ):
+            # chunked prefill: reserve the lane now, feed chunks per
+            # round, starting past the matched prefix (0 on a miss)
             self.active[slot] = req.rid
-            self._chunk_cursor[req.rid] = 0
+            self._chunk_cursor[req.rid] = match.matched if match else 0
             self._prefill_one_chunk(slot)
             return True
 
@@ -496,6 +607,45 @@ class Scheduler:
         self.active[slot] = req.rid
         self._start_decode(slot, req, first)
         return True
+
+    def _prefill_hybrid_suffix(self, slot: int, req: Request, match) -> None:
+        """Warm hybrid prefill: resume the SSM recurrence from the
+        anchor's snapshot and prefill only the unmatched suffix, with the
+        matched prefix's shared-attention KV gathered from the adopted
+        pool blocks. One unpadded step (one trace per suffix length, the
+        hybrid prefill rule)."""
+        rid = req.rid
+        m = match.matched
+        p = len(req.prompt)
+        self.pool.note_tokens(rid, p)
+        suffix = req.prompt[m:]
+        n = len(suffix)
+        write_rows = self.pool.rows_of(rid)[m:p][None]
+        row_table = self.pool.rows_of(rid, pad_to=self.s_max)[None]
+        # the anchor snapshot is the step's initial state; the lane slot
+        # is overwritten with the post-suffix state below
+        lane = jax.tree.map(jnp.asarray, match.lane_state)
+        logits, self.pool.k, self.pool.v, new_lane = self._hybrid_suffix(
+            self.params,
+            jnp.asarray(suffix[None]),
+            self.pool.k,
+            self.pool.v,
+            jnp.asarray(row_table),
+            jnp.asarray(write_rows),
+            jnp.asarray(m, jnp.int32),
+            jnp.asarray(n - 1, jnp.int32),
+            lane,
+        )
+        self._lane_state = jax.tree.map(
+            lambda dst, src: dst.at[:, slot].set(src[:, 0]),
+            self._lane_state,
+            new_lane,
+        )
+        self.stats.prefill_steps += 1
+        self.stats.prefill_tokens += n
+        first = self._sample_one(req, np.asarray(logits[0, 0, :]))
+        self.active[slot] = rid
+        self._start_decode(slot, req, first)
 
     def _prefill_one_chunk(self, slot: int) -> None:
         """Run one ``prefill_chunk``-sized piece of a long prompt."""
@@ -584,7 +734,11 @@ class Scheduler:
             )
         self.stats.decode_steps += 1
         rows = np.asarray(logits[:, 0, :])
-        util = self.pool.stats().utilization
+        pool_st = self.pool.stats()
+        util = pool_st.utilization
+        self.stats.shared_blocks_peak = max(
+            self.stats.shared_blocks_peak, pool_st.shared_blocks
+        )
         self.stats.util_samples_any.append(util)
         if all(r is not None for r in self.active):
             self.stats.util_samples.append(util)

@@ -176,6 +176,28 @@ def make_chunk_prefill_step(cfg: ModelConfig) -> Callable:
     return step
 
 
+def make_hybrid_suffix_prefill_step(cfg: ModelConfig) -> Callable:
+    """Hybrid prompt-suffix prefill resuming from carried SSM state.
+
+    (params, tokens (B, C) unpadded suffix, pool_k, pool_v, row_table
+    (B, S_max), write_rows (B, C), start (), last_idx (), lane_state) ->
+    (logits at last_idx (B, 1, V), new pool_k, new pool_v, new
+    lane_state). The prefix-cache warm path for zamba2: the matched
+    prefix's shared-attention KV is gathered from the pool and the SSD
+    recurrence seeds from the anchor's lane-state snapshot. Jit with
+    ``donate_argnums=(2, 3, 8)``.
+    """
+
+    def step(params, tokens, pool_k, pool_v, row_table, write_rows, start,
+             last_idx, lane_state):
+        return lm.prefill_suffix_paged_hybrid(
+            params, cfg, tokens, pool_k, pool_v, row_table, write_rows,
+            start, last_idx, lane_state,
+        )
+
+    return step
+
+
 def make_budgeted_paged_serve_step(
     cfg: ModelConfig, stream_mask: tuple, stream_depth: int
 ) -> Callable:

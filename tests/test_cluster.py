@@ -32,6 +32,7 @@ from repro.runtime.cluster import (
     provision_split,
     synthesize,
 )
+from repro.runtime.cluster.traffic import ClientRequest
 from repro.runtime.kv_pool import KVPool
 from repro.runtime.scheduler import RequestState, Scheduler
 
@@ -241,15 +242,66 @@ def test_disagg_one_token_requests_complete(setup):
     assert all(not math.isnan(t.t_done) for t in res.timings.values())
 
 
-def test_disagg_rejects_non_kv_families(setup):
+def test_disagg_rejects_non_paged_families(setup):
+    """Pure SSM still has no block wire format; hybrid now disaggregates
+    (the payload carries its SSM lane state)."""
     _, _, cost = setup
-    hcfg = get_smoke_config("zamba2_2p7b")
-    hparams = lm.init_params(hcfg, jax.random.key(0))
+    scfg = get_smoke_config("mamba2_1p3b")
+    sparams = lm.init_params(scfg, jax.random.key(0))
     with pytest.raises(ValueError, match="wire format"):
         DisaggCluster(
-            hcfg, hparams, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
+            scfg, sparams, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
             block_tokens=BLOCK, cost=cost, split=(1, 1),
         )
+
+
+def test_hybrid_disagg_token_identity():
+    """ISSUE 5 satellite: zamba2 requests prefill on engine A and decode
+    on engine B — the handoff ships the SSM lane state next to the KV
+    blocks, and the streams equal single-engine serving exactly."""
+    hcfg = get_smoke_config("zamba2_2p7b")
+    hparams = lm.init_params(hcfg, jax.random.key(0))
+    cost = StepCostModel.for_config(get_config("zamba2_2p7b"), slots=SLOTS)
+    spec = _spec(hcfg, n_requests=6)
+    trace = synthesize(spec)
+    single = _cluster("fleet", hcfg, hparams, cost, spec, n_engines=1).run(
+        trace
+    )
+    disagg = _cluster("disagg", hcfg, hparams, cost, spec, n_engines=2).run(
+        trace
+    )
+    assert disagg.outputs == single.outputs
+    assert sum(
+        s["handoffs"] for s in disagg.engine_summaries
+    ) == spec.n_requests
+
+
+def test_hybrid_handoff_payload_carries_lane_state(setup):
+    """Scheduler-level: the hybrid PrefillHandoff must carry the SSM
+    snapshot, and importing without one is an error, not silent drift."""
+    hcfg = get_smoke_config("zamba2_2p7b")
+    hparams = lm.init_params(hcfg, jax.random.key(0))
+    payloads = []
+    pool = KVPool.for_slots(
+        hcfg, slots=SLOTS, max_len=MAX_LEN, block_tokens=BLOCK
+    )
+    a = Scheduler(
+        hcfg, hparams, pool, slots=SLOTS, max_len=MAX_LEN,
+        handoff=payloads.append,
+    )
+    a.submit(np.arange(5, dtype=np.int32) % hcfg.vocab, 3)
+    while a.queue or any(r is not None for r in a.active):
+        a.round()
+    (pl,) = payloads
+    assert pl.lane_state is not None
+    assert pl.kv_bytes > pl.k.nbytes + pl.v.nbytes  # lane rides the wire
+    bpool = KVPool.for_slots(
+        hcfg, slots=SLOTS, max_len=MAX_LEN, block_tokens=BLOCK
+    )
+    b = Scheduler(hcfg, hparams, bpool, slots=SLOTS, max_len=MAX_LEN)
+    with pytest.raises(ValueError, match="lane state"):
+        b.import_prefilled(dataclasses.replace(pl, lane_state=None))
+    assert b.import_prefilled(pl)
 
 
 # ---------------- router invariants ----------------
@@ -286,6 +338,38 @@ def test_drain_loses_and_duplicates_nothing(setup):
     # exactly-once completion, bit-identical streams (rid-keyed sampling)
     assert drained.outputs == single.outputs
     assert sorted(drained.outputs) == [r.rid for r in trace]
+
+
+def test_prefix_aware_routing_reuses_cached_blocks(setup):
+    """The prefix-aware policy lands repeat prompts on the engine whose
+    radix cache holds their prefix: hit tokens accrue, and the streams
+    stay identical to least-loaded routing (the identity invariant is
+    placement-independent)."""
+    cfg, params, cost = setup
+    rng = np.random.default_rng(17)
+    base = rng.integers(0, cfg.vocab, size=(8,)).astype(np.int32)
+    trace = []
+    t = 0.0
+    for rid in range(8):
+        t += 0.05  # light load: engines go idle between arrivals, so
+        # only the cache score (not load) can keep a session together
+        ext = rng.integers(0, cfg.vocab, size=(4,)).astype(np.int32)
+        prompt = base if rid % 2 == 0 else np.concatenate([base, ext])
+        trace.append(
+            ClientRequest(rid, t, prompt, 4, session=rid % 2)
+        )
+    ll = _cluster("fleet", cfg, params, cost, None, n_engines=2).run(trace)
+    pa_cluster = _cluster(
+        "fleet", cfg, params, cost, None, n_engines=2,
+        policy="prefix-aware", prefix_cache=True,
+    )
+    pa = pa_cluster.run(trace)
+    assert pa.outputs == ll.outputs
+    hits = sum(s["prefix_hits"] for s in pa.engine_summaries)
+    assert hits >= 6  # every repeat after the two cold prompts hits
+    # the shared-prefix requests were co-located, not spread by load
+    eng_of = {rid: eids[-1] for rid, eids in pa.assignments.items()}
+    assert len({eng_of[r.rid] for r in trace[2:]}) <= 2
 
 
 def test_affinity_keeps_sessions_on_one_engine(setup):

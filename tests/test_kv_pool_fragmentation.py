@@ -137,3 +137,162 @@ def test_over_commitment_growth_is_refused():
     assert pool.blocks_held(0) == 2
     pool.release(0)
     assert pool.free_blocks == pool.usable_blocks
+
+
+# ---------------- refcounts, COW, cache pins (ISSUE 5) ----------------
+
+
+def test_double_free_raises_actionable_error():
+    """Releasing a request twice must raise an error naming the rid, not
+    silently re-append its blocks to the free list."""
+    pool = _pool()
+    pool.admit(7, 8)
+    pool.note_tokens(7, 8)
+    pool.release(7)
+    free_before = pool.free_blocks
+    with pytest.raises(ValueError, match="7.*double free"):
+        pool.release(7)
+    assert pool.free_blocks == free_before  # nothing re-appended
+    pool.validate()
+    with pytest.raises(ValueError, match="99"):
+        pool.release(99)  # never admitted
+
+
+def test_validate_asserts_free_list_uniqueness():
+    pool = _pool()
+    pool.validate()
+    pool._free.append(pool._free[-1])  # corrupt: duplicate free entry
+    with pytest.raises(AssertionError, match="duplicate"):
+        pool.validate()
+
+
+def test_adopt_prefix_refcounts_and_cow():
+    """Aliasing bumps refcounts; a partial tail is duplicated (COW) so
+    the adopter's writes can never touch the shared rows; release of
+    either holder leaves the other intact."""
+    pool = _pool()
+    pool.admit(0, 12)
+    pool.note_tokens(0, 12)  # blocks b0 b1 b2
+    b = pool.blocks_of(0)
+    pool.admit(1, 16)
+    # request 1 matched 10 tokens of request 0's prompt: 2 full blocks
+    # shared + a mid-block divergence in b[2]
+    pool.adopt_prefix(1, b[:2], b[2], 10)
+    pool.validate()
+    assert pool.ref_count(b[0]) == pool.ref_count(b[1]) == 2
+    assert pool.ref_count(b[2]) == 1  # tail was copied, not aliased
+    cow = pool.blocks_of(1)[2]
+    assert cow not in b
+    st = pool.stats()
+    assert st.shared_blocks == 2
+    # shared physical rows counted once: 12 + 16 logical tokens over
+    # 12 + (16 - 8 shared) physical rows... held_tokens is per-block max
+    assert st.held_tokens == 12 + (10 - 8) + 0  # b0..b2 (12) + cow (2)
+    pool.release(0)
+    pool.validate()
+    assert pool.ref_count(b[0]) == 1  # request 1 still holds the aliases
+    pool.note_tokens(1, 16)
+    pool.release(1)
+    pool.validate()
+    assert pool.free_blocks == pool.usable_blocks
+
+
+def test_cache_pin_and_eviction_never_reclaims_held_blocks():
+    """uncache() frees a block only at refcount zero: eviction can never
+    reclaim a block a live request holds."""
+    pool = _pool()
+    pool.admit(0, 8)
+    pool.note_tokens(0, 8)
+    b0, b1 = pool.blocks_of(0)
+    pool.retain_cached(b0)
+    pool.retain_cached(b1)
+    pool.validate()
+    assert pool.cached_blocks == 2 and pool.evictable_blocks == 0
+    assert pool.uncache(b0) == 0  # request 0 still holds it
+    assert b0 not in pool._free
+    pool.release(0)
+    pool.validate()
+    assert b0 in pool._free  # freed at release: last holder let go
+    assert pool.evictable_blocks == 1  # b1: cache-only now
+    assert pool.uncache(b1) == 1
+    pool.validate()
+    assert pool.free_blocks == pool.usable_blocks
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_refcount_cow_churn_invariants(data):
+    """Random admit/grow/adopt/pin/unpin/release schedule: after every
+    op no block is simultaneously free and referenced, refcounts hit
+    zero iff no live block-table entry or cache pin remains, and
+    eviction (unpin) never frees a block a live request holds — all
+    enforced by validate() plus explicit free-list checks."""
+    pool = _pool()
+    live: dict[int, int] = {}  # rid -> committed tokens
+    pinned: list[int] = []
+    next_rid = 0
+    for _ in range(40):
+        op = data.draw(
+            st.sampled_from(["admit", "grow", "adopt", "pin", "unpin",
+                             "release"]),
+            label="op",
+        )
+        if op == "admit":
+            total = data.draw(st.integers(1, 16), label="total")
+            if pool.can_admit(total):
+                pool.admit(next_rid, total)
+                live[next_rid] = total
+                next_rid += 1
+        elif op == "grow" and live:
+            rid = data.draw(st.sampled_from(sorted(live)), label="rid")
+            tokens = data.draw(st.integers(1, live[rid]), label="tokens")
+            pool.note_tokens(rid, max(tokens, pool.tokens_held(rid)))
+        elif op == "adopt" and live:
+            donor = data.draw(st.sampled_from(sorted(live)), label="donor")
+            held = pool.tokens_held(donor)
+            if held >= 2 and pool.can_admit(16):
+                matched = data.draw(
+                    st.integers(1, held - 1), label="matched"
+                )
+                pool.admit(next_rid, 16)
+                blocks = pool.blocks_of(donor)
+                full = matched // BLOCK
+                tail = blocks[full] if matched % BLOCK else None
+                pool.adopt_prefix(next_rid, blocks[:full], tail, matched)
+                live[next_rid] = 16
+                next_rid += 1
+        elif op == "pin" and live:
+            rid = data.draw(st.sampled_from(sorted(live)), label="prid")
+            cands = [
+                b for b in pool.blocks_of(rid) if b not in pool._cached
+            ]
+            if cands:
+                pool.retain_cached(cands[0])
+                pinned.append(cands[0])
+        elif op == "unpin" and pinned:
+            b = pinned.pop(data.draw(
+                st.integers(0, len(pinned) - 1), label="unpin_i"
+            ))
+            holders = sum(b in pool.blocks_of(r) for r in live)
+            freed = pool.uncache(b)
+            # eviction never reclaims a block a live request holds
+            assert freed == (0 if holders else 1)
+            assert (b in pool._free) == (holders == 0)
+        elif op == "release" and live:
+            rid = data.draw(st.sampled_from(sorted(live)), label="rrid")
+            pool.release(rid)
+            del live[rid]
+        pool.validate()
+        # refcount == 0 (absent) iff free; shared counted once in stats
+        st_ = pool.stats()
+        assert st_.held_blocks + pool.free_blocks + sum(
+            1 for b in pool._cached
+            if all(b not in pool.blocks_of(r) for r in live)
+        ) == pool.usable_blocks
+        assert st_.utilization <= 1.0 + 1e-9
+    for b in list(pinned):
+        pool.uncache(b)
+    for rid in list(live):
+        pool.release(rid)
+    pool.validate()
+    assert pool.free_blocks == pool.usable_blocks

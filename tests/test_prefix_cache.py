@@ -1,0 +1,302 @@
+"""Radix prefix cache (`runtime.prefix_cache`) + refcounted COW pool
+(ISSUE 5): longest-prefix matching at block granularity, partial-block
+divergence via copy-on-write, hybrid SSM-state anchors, LRU eviction
+under admission pressure, and — the acceptance gate — prefix-cached
+decode being *exactly* token-identical to cold-start serving for dense,
+packed, and hybrid archs, greedy and seeded sampling alike."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.runtime.kv_pool import KVPool
+from repro.runtime.prefix_cache import PrefixCache
+from repro.runtime.scheduler import Scheduler
+
+BLOCK, MAX_LEN, SLOTS, GEN = 4, 48, 3, 4
+
+
+def _cfg():
+    return get_smoke_config("smollm_360m")
+
+
+def _sched(cfg, params, cached=True, slots=SLOTS, n_blocks=None, **kw):
+    if n_blocks is None:
+        pool = KVPool.for_slots(
+            cfg, slots=slots, max_len=MAX_LEN, block_tokens=BLOCK
+        )
+    else:
+        pool = KVPool(cfg, n_blocks=n_blocks, block_tokens=BLOCK)
+    cache = PrefixCache(pool) if cached else None
+    return Scheduler(
+        cfg, params, pool, slots=slots, max_len=MAX_LEN,
+        prefix_cache=cache, **kw,
+    )
+
+
+def _serve_waves(sched, waves, gen=GEN):
+    for wave in waves:
+        for p in wave:
+            sched.submit(p, gen)
+        sched.run()
+    sched.pool.validate()
+    return sched.outputs()
+
+
+def _prompt(rng, n, vocab):
+    return rng.integers(0, vocab, size=(n,)).astype(np.int32)
+
+
+# ---------------- radix tree unit behaviour ----------------
+
+
+def test_radix_match_insert_and_cap():
+    """Full blocks match through the tree; the match is capped at p-1
+    (something must prefill); a mid-block divergence returns the partial
+    block for COW; unrelated prompts miss."""
+    cfg = _cfg()
+    pool = KVPool(cfg, n_blocks=33, block_tokens=BLOCK)
+    cache = PrefixCache(pool)
+    prompt = np.arange(100, 112, dtype=np.int32)  # 12 tokens, 3 blocks
+    pool.admit(0, 12)
+    pool.note_tokens(0, 12)
+    blocks = pool.blocks_of(0)
+    cache.commit(prompt, blocks)
+    assert cache.stats()["nodes"] == 3
+    pool.release(0)
+    pool.validate()
+
+    # identical prompt: cap at p-1 = 11 -> 2 full blocks + COW tail
+    m = cache.lookup(prompt)
+    assert (m.matched, m.shared, m.tail_block) == (11, blocks[:2], blocks[2])
+    # an extension matches the whole committed prefix, block-aligned
+    ext = np.concatenate([prompt, [7, 8]]).astype(np.int32)
+    m = cache.lookup(ext)
+    assert (m.matched, m.shared, m.tail_block) == (12, blocks, None)
+    # divergence mid-block 2: partial match -> COW that block
+    div = prompt.copy()
+    div[9] = 999
+    m = cache.lookup(div)
+    assert (m.matched, m.shared, m.tail_block) == (9, blocks[:2], blocks[2])
+    # divergence in block 0: 3 shared tokens, all COW
+    div0 = prompt.copy()
+    div0[3] = 999
+    m = cache.lookup(div0)
+    assert (m.matched, m.shared, m.tail_block) == (3, (), blocks[0])
+    # a 1-token prompt can never hit (cap 0), nor can a miss
+    assert cache.lookup(prompt[:1]) is None
+    assert cache.lookup(np.array([1, 2, 3, 4, 5], np.int32)) is None
+    # peek scoring does not bump hit counters
+    hits = cache.hits
+    assert cache.match_tokens(prompt) == 11
+    assert cache.hits == hits
+
+
+def test_radix_eviction_is_lru_and_bottom_up():
+    """Eviction removes leaf nodes LRU-first, freeing exactly the blocks
+    nothing else holds; a fresher chain survives an older one."""
+    cfg = _cfg()
+    pool = KVPool(cfg, n_blocks=33, block_tokens=BLOCK)
+    cache = PrefixCache(pool)
+    old = np.arange(0, 8, dtype=np.int32)
+    new = np.arange(50, 58, dtype=np.int32)
+    for rid, p in ((0, old), (1, new)):
+        pool.admit(rid, 8)
+        pool.note_tokens(rid, 8)
+        cache.commit(p, pool.blocks_of(rid))
+        pool.release(rid)
+    cache.lookup(np.concatenate([new, [1]]).astype(np.int32))  # touch new
+    assert pool.cached_blocks == 4
+    freed = cache.evict(2)
+    assert freed == 2
+    # the untouched chain went first, deepest leaf upward
+    assert cache.lookup(np.concatenate([old, [1]]).astype(np.int32)) is None
+    assert cache.lookup(np.concatenate([new, [1]]).astype(np.int32)) is not None
+    pool.validate()
+    assert pool.free_blocks + pool.cached_blocks == pool.usable_blocks
+
+
+def test_eviction_spares_zero_gain_anchors():
+    """A block-aligned anchor (tail None) frees nothing when evicted;
+    under pressure the evictor must reclaim real blocks (LRU leaves)
+    and keep such anchors — hybrid resume points — alive."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    pool = KVPool(cfg, n_blocks=33, block_tokens=BLOCK)
+    cache = PrefixCache(pool)
+    lane = {"ssm": np.zeros((2, 1, 1), np.float32)}
+    anchored = np.arange(0, 8, dtype=np.int32)  # aligned: tail None
+    pool.admit(0, 8)
+    pool.note_tokens(0, 8)
+    cache.commit(anchored, pool.blocks_of(0), lane_state=lane)
+    pool.release(0)
+    plain = np.arange(50, 58, dtype=np.int32)
+    pool.admit(1, 8)
+    pool.note_tokens(1, 8)
+    cache.commit(plain, pool.blocks_of(1))
+    pool.release(1)
+    cache.lookup(np.concatenate([anchored, [1]]).astype(np.int32),
+                 anchor=True)  # the anchor chain is *fresher* than plain
+    assert cache.evict(1) == 1
+    # the plain chain's leaf went; the anchor (and its chain) survived
+    m = cache.lookup(
+        np.concatenate([anchored, [1]]).astype(np.int32), anchor=True
+    )
+    assert m is not None and m.matched == 8
+    # with nothing else left, anchors do yield so their nodes can free
+    freed = cache.evict(8)
+    assert freed >= 3  # plain's other block + the anchor chain's two
+    assert pool.cached_blocks == 0
+    pool.validate()
+
+
+# ---------------- scheduler-level token identity ----------------
+
+
+def test_warm_serving_token_identical_and_charges_suffix_only():
+    """Prefix-cached serving must reproduce cold serving exactly while
+    charging prefill only for unmatched suffixes — including a sibling
+    that diverges mid-block (COW) and co-resident aliasing."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(5)
+    base = _prompt(rng, 10, cfg.vocab)  # 10 % BLOCK != 0
+    ext = np.concatenate([base, _prompt(rng, 6, cfg.vocab)])
+    sib = np.concatenate([base[:-1], _prompt(rng, 7, cfg.vocab)])
+    waves = [[base], [ext, sib]]
+
+    cold = _serve_waves(_sched(cfg, params, cached=False), waves)
+    warm_s = _sched(cfg, params, cached=True)
+    warm = _serve_waves(warm_s, waves)
+    assert warm == cold
+    st = warm_s.stats
+    # base misses (only its 2 *full* blocks = 8 tokens get cached); ext
+    # matches those 8; once ext commits, sib matches 9 — one token into
+    # ext's third block, the mid-block COW case
+    assert st.prefix_hit_tokens == 8 + 9
+    assert st.prefill_tokens == 10 + (16 - 8) + (16 - 9)
+    assert st.prefix_hits == 2
+    assert st.shared_blocks_peak >= 2  # ext and sib alias base's blocks
+
+
+def test_warm_serving_matches_seeded_sampling():
+    """The identity gate holds under non-greedy sampling too: the rng is
+    keyed on (seed, rid, position), which cached prefill does not move."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(6)
+    base = _prompt(rng, 12, cfg.vocab)
+    ext = np.concatenate([base, _prompt(rng, 5, cfg.vocab)])
+    sp = lm.SamplingParams(temperature=0.8, top_k=16, top_p=0.9, seed=11)
+    waves = [[base], [ext]]
+    cold = _serve_waves(_sched(cfg, params, cached=False, sampling=sp), waves)
+    warm = _serve_waves(_sched(cfg, params, cached=True, sampling=sp), waves)
+    assert warm == cold
+
+
+def test_warm_serving_packed_arch():
+    """FCMP-packed weights (w_bits=1) hold the same identity gate."""
+    cfg = dataclasses.replace(_cfg(), w_bits=1)
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(7)
+    base = _prompt(rng, 8, cfg.vocab)
+    ext = np.concatenate([base, _prompt(rng, 8, cfg.vocab)])
+    waves = [[base], [ext]]
+    cold = _serve_waves(_sched(cfg, params, cached=False), waves)
+    warm_s = _sched(cfg, params, cached=True)
+    warm = _serve_waves(warm_s, waves)
+    assert warm == cold
+    assert warm_s.stats.prefix_hits == 1
+
+
+def test_hybrid_warm_serving_resumes_ssm_state():
+    """Zamba2 prefix hits resume from the anchor's SSM snapshot: nested
+    multi-turn prompts reproduce cold serving exactly, with anchors at
+    non-block-aligned positions exercising the COW tail."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(8)
+    t1 = _prompt(rng, 9, cfg.vocab)  # 9 % BLOCK != 0: partial-tail anchor
+    t2 = np.concatenate([t1, _prompt(rng, 7, cfg.vocab)])
+    t3 = np.concatenate([t2, _prompt(rng, 6, cfg.vocab)])
+    waves = [[t1], [t2], [t3]]
+    cold = _serve_waves(_sched(cfg, params, cached=False), waves)
+    warm_s = _sched(cfg, params, cached=True)
+    warm = _serve_waves(warm_s, waves)
+    assert warm == cold
+    st = warm_s.stats
+    assert st.prefix_hits == 2
+    assert st.prefix_hit_tokens == 9 + 16  # t2 resumes at 9, t3 at 16
+    assert st.prefill_tokens == 9 + 7 + 6
+
+
+def test_hybrid_divergent_prompt_misses_anchor():
+    """A prompt sharing tokens but not a committed *prompt end* has no
+    SSM state to resume from — hybrids must miss, not corrupt."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(9)
+    t1 = _prompt(rng, 8, cfg.vocab)
+    div = np.concatenate([t1[:6], _prompt(rng, 6, cfg.vocab)])
+    waves = [[t1], [div]]
+    cold = _serve_waves(_sched(cfg, params, cached=False), waves)
+    warm_s = _sched(cfg, params, cached=True)
+    warm = _serve_waves(warm_s, waves)
+    assert warm == cold
+    assert warm_s.stats.prefix_hits == 0  # 6 matched tokens but no anchor
+
+
+def test_eviction_under_admission_pressure():
+    """A pool too small to keep every finished prompt cached must evict
+    LRU prefixes to admit new work — and still serve correctly."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(10)
+    # 8 usable blocks; each 8+GEN request commits 3 blocks -> pressure
+    prompts = [_prompt(rng, 8, cfg.vocab) for _ in range(6)]
+    sched = _sched(cfg, params, cached=True, slots=2, n_blocks=9)
+    outs = _serve_waves(sched, [[p] for p in prompts])
+    assert sorted(outs) == list(range(6))
+    assert sched.prefix_cache.evicted_blocks > 0
+    cold = _serve_waves(
+        _sched(cfg, params, cached=False, slots=2, n_blocks=9),
+        [[p] for p in prompts],
+    )
+    assert outs == cold
+
+
+def test_shared_blocks_counted_once_in_utilization():
+    """Eq.-1-style accounting: co-resident requests aliasing one prefix
+    contribute its physical rows (and tokens) once."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(11)
+    base = _prompt(rng, 8, cfg.vocab)
+    ext_a = np.concatenate([base, _prompt(rng, 4, cfg.vocab)])
+    ext_b = np.concatenate([base, _prompt(rng, 4, cfg.vocab)])
+    sched = _sched(cfg, params, cached=True)
+    sched.submit(base, GEN)
+    sched.run()
+    for p in (ext_a, ext_b):
+        sched.submit(p, GEN)
+    while sched.queue or any(r is not None for r in sched.active):
+        sched.round()
+        st = sched.pool.stats()
+        assert st.utilization <= 1.0 + 1e-9
+        assert st.held_blocks <= st.n_blocks
+    assert sched.stats.shared_blocks_peak >= 2
+    sched.pool.validate()
+
+
+def test_moe_rejects_prefix_cache():
+    cfg = get_smoke_config("olmoe_1b_7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    pool = KVPool.for_slots(cfg, slots=2, max_len=MAX_LEN, block_tokens=BLOCK)
+    with pytest.raises(ValueError, match="cross-token"):
+        Scheduler(
+            cfg, params, pool, slots=2, max_len=MAX_LEN,
+            prefix_cache=PrefixCache(pool),
+        )
