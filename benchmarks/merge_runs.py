@@ -2,13 +2,16 @@
 the same identity key. Used to splice re-measured cells into a sweep
 artifact after a targeted fix.
 
-Three record shapes are understood: dry-run cells, keyed
+Four record shapes are understood: dry-run cells, keyed
 (arch, shape, mesh, quant, vmem budget); flat fleet rows as emitted in
 ``benchmarks/fleet_bench.py``'s "rows" list, keyed
-(mode, engines, split, quant); and ``benchmarks/prefix_bench.py`` rows
+(mode, engines, split, quant); ``benchmarks/prefix_bench.py`` rows
 (self-identified via ``"bench": "prefix"``), keyed
-(arch, quant, mode). (A ``launch.fleet --json`` report is one nested
-object, not jsonl — flatten it via ``report.load_fleet`` first.)
+(arch, quant, mode); and ``benchmarks/soak_bench.py`` trajectory
+entries (``"bench": "soak"``), keyed by configuration + run index so
+successive soaks of the same shape replace each other. (A
+``launch.fleet --json`` report is one nested object, not jsonl —
+flatten it via ``report.load_fleet`` first.)
 
     python benchmarks/merge_runs.py out.jsonl base.jsonl patch1.jsonl ...
 """
@@ -21,6 +24,11 @@ def record_key(r: dict) -> tuple:
     if r.get("bench") == "prefix":  # a prefix-cache A/B row
         return (
             "prefix", r["arch"], r.get("quant", 0), r.get("mode"),
+        )
+    if r.get("bench") == "soak":  # a soak-trajectory entry (no "arch")
+        return (
+            "soak", r.get("segments"), r.get("requests"),
+            r.get("seed", 0), r.get("run_index", 0),
         )
     if "arch" in r:  # a dry-run cell
         return (

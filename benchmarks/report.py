@@ -153,6 +153,39 @@ def prefix_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def soak_table(rows: list[dict]) -> str:
+    """Render soak-trajectory entries (``BENCH_trajectory.json`` or a
+    merged jsonl): one line per ``benchmarks/soak_bench.py`` run, so the
+    file reads as the repo's endurance history across PRs."""
+    lines = [
+        "| run | virtual h | segs | reqs | done | drains | follow-ups | gen-reuse hits | handoffs | checks | TTFT p95 ms | TPOT p95 ms | wall s | ok |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("bench") not in (None, "soak"):
+            continue  # merged jsonl may interleave other record shapes
+        if "virtual_hours" not in r:
+            continue
+        lines.append(
+            "| {idx} | {vh:.2f} | {seg} | {req} | {done} | {dr} | {fu} | "
+            "{reuse} | {ho} | {chk} | {ttft:.1f} | {tpot:.1f} | {wall:.1f} | "
+            "{ok} |".format(
+                idx=r.get("run_index", "—"),
+                vh=r["virtual_hours"], seg=r.get("segments", 0),
+                req=r.get("requests", 0), done=r.get("completed", 0),
+                dr=r.get("drains", 0), fu=r.get("followups", 0),
+                reuse=r.get("gen_reuse_hits", 0),
+                ho=r.get("handoffs", 0),
+                chk=r.get("invariant_checks", 0),
+                ttft=r.get("ttft_p95_s", 0.0) * 1e3,
+                tpot=r.get("tpot_p95_s", 0.0) * 1e3,
+                wall=r.get("wall_s", 0.0),
+                ok="yes" if r.get("ok") else "NO",
+            )
+        )
+    return "\n".join(lines)
+
+
 def _load_rows(path: str) -> list[dict] | dict:
     """A single JSON document -> as parsed; a jsonl of flat records ->
     list (a jsonl's first line parses but leaves extra data, so the
@@ -170,6 +203,15 @@ def load_prefix(path: str) -> list[dict]:
     jsonl of flat row records."""
     data = _load_rows(path)
     return data["rows"] if isinstance(data, dict) else data
+
+
+def load_soak(path: str) -> list[dict]:
+    """Soak rows from the trajectory file (a plain JSON list), a soak
+    bench JSON ({"rows": [...]}), or a merged jsonl."""
+    data = _load_rows(path)
+    if isinstance(data, dict):
+        return data.get("rows", [data])
+    return data
 
 
 def load_fleet(path: str) -> list[dict]:
@@ -196,6 +238,8 @@ if __name__ == "__main__":
         print(fleet_table(load_fleet(path)))
     elif which == "prefix":
         print(prefix_table(load_prefix(path)))
+    elif which == "soak":
+        print(soak_table(load_soak(path)))
     elif which == "roofline":
         print(roofline_table(load(path)))
     else:

@@ -19,6 +19,7 @@ from benchmarks import (
     residency_bench,
     roofline_table,
     serve_bench,
+    soak_bench,
     table1_bnn_pynq,
     table2_rn50,
     table4_packing,
@@ -38,6 +39,7 @@ BENCHES = [
     ("fleet_bench (multi-engine fleet + disaggregated prefill/decode)",
      fleet_bench),
     ("prefix_bench (radix prefix cache vs cold KV pool)", prefix_bench),
+    ("soak_bench (virtual-hour churn soak + tracker replay)", soak_bench),
 ]
 
 

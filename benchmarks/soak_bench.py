@@ -1,0 +1,425 @@
+"""Long-horizon soak: multi-turn churn over the full serving stack.
+
+The unit suites pin each seam in isolation; the soak replays the
+*composition* for hours of virtual time and checks the conservation
+invariants that only break under churn — leaked pool blocks after a
+drain, a stale chunk cursor, a refcount that drifts across thousands of
+adopt/release cycles, a tracker stream that stops adding up.
+
+One soak run drives two phases over the same JSONL tracker stream:
+
+  phase 1 (fleet): a 2-engine prefix-aware ``FleetCluster`` serves
+  ``n_segments`` bursts of traffic spread over ``span_s`` virtual
+  seconds each. Segments are *conversational*: half of each segment's
+  arrivals extend a finished session (prior prompt + prior full
+  response + fresh turn), which exercises ISSUE 6's generated-token
+  re-indexing — the soak counts follow-ups whose cached match reaches
+  past the parent's prompt into its generated tokens. Odd segments
+  drain one engine mid-burst and restore it afterwards (requeue churn).
+
+  phase 2 (disagg): a 3-engine ``DisaggCluster`` serves one more burst,
+  so KV-handoff payload accounting rides the same invariant probe.
+
+Invariants, probed every ``check_every`` engine rounds and at every
+phase end:
+
+  * ``KVPool.validate()`` — per-block refcount audit plus the lifetime
+    conservation law ``alloc_blocks - freed_blocks == live blocks``;
+  * no chunk-cursor or hybrid chunk-lane entry outside an active slot
+    (the drain-leak regression of ISSUE 6);
+  * every completed request produced exactly ``max_new_tokens`` tokens,
+    and the engines' ``generated_tokens`` counters sum to exactly the
+    tokens handed back (token conservation);
+  * replaying the emitted JSONL stream (``tracker.replay_summary``)
+    reproduces every engine's live summary counters exactly;
+  * TTFT/TPOT percentiles stay inside a loose SLO band (the soak is a
+    conservation test, not a latency benchmark).
+
+The run summary is appended to ``BENCH_trajectory.json`` at the repo
+root (see ``benchmarks/trajectory.py``) — the longitudinal record.
+
+CLI (defaults to >= 1 virtual hour)::
+
+    PYTHONPATH=src python benchmarks/soak_bench.py \
+        [--virtual-hours 1.0] [--segments 4] [--requests 8] \
+        [--trace-out soak_trace.jsonl] [--out soak_bench.json] \
+        [--no-trajectory]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# `python benchmarks/soak_bench.py` puts benchmarks/ (not the repo
+# root) on sys.path; the trajectory import below needs the root
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+BLOCK = 4
+SLOTS = 2
+MAX_LEN = 64
+FRESH_TURN = 6  # tokens a follow-up appends after the prior response
+SLO_TTFT_S = 600.0  # loose: the soak's bursts intentionally queue
+SLO_TPOT_S = 60.0
+
+
+# ---------------- conversational trace ----------------
+
+
+def _segment_trace(rng, vocab, *, rid0, t0, span_s, n, history, engines):
+    """One burst of arrivals. ``history`` maps session -> (prompt,
+    output) of the session's last finished turn; half the arrivals
+    extend one. Returns (requests, probes) where probes carry each
+    follow-up's cached-match length *at build time* against its
+    parent's prompt length (the generated-token reuse accounting)."""
+    import numpy as np
+
+    from repro.runtime.cluster.traffic import ClientRequest
+
+    fresh = lambda k: rng.integers(0, vocab, size=(k,)).astype(np.int32)
+    reqs, probes = [], []
+    sessions = sorted(history)
+    next_session = (max(sessions) + 1) if sessions else 0
+    for i in range(n):
+        # front-loaded burst: 60% arrive nearly at once (queues form, so
+        # a mid-burst drain genuinely moves requests), the rest trickle
+        if i < (6 * n) // 10:
+            t = t0 + 0.001 * i
+        else:
+            t = t0 + span_s * (i + 1) / n  # last arrival paces the horizon
+        rid = rid0 + i
+        gen = int(rng.choice((4, 8)))
+        parent = None
+        if sessions and rng.random() < 0.5:
+            s = sessions[int(rng.integers(len(sessions)))]
+            pp, out = history[s]
+            prompt = np.concatenate(
+                [pp, np.asarray(out, np.int32), fresh(FRESH_TURN)]
+            )
+            if len(prompt) + gen <= MAX_LEN:
+                parent = (s, len(pp))
+            else:  # conversation outgrew the context: start a new one
+                prompt = fresh(int(rng.integers(8, 17)))
+        else:
+            prompt = fresh(int(rng.integers(8, 17)))
+        if parent is not None:
+            session, plen = parent
+            matched = max(e.prefix_match_tokens(prompt) for e in engines)
+            probes.append(
+                {"rid": rid, "parent_prompt_len": plen, "matched": matched}
+            )
+        else:
+            session = next_session
+            next_session += 1
+        reqs.append(ClientRequest(rid, t, prompt, gen, session))
+    return reqs, probes
+
+
+# ---------------- invariant probe ----------------
+
+
+class _Probe:
+    """Periodic per-round invariant check (the ``round_hook``)."""
+
+    def __init__(self, check_every: int):
+        self.check_every = check_every
+        self.checks = 0
+        self.failures: list[str] = []
+
+    def __call__(self, engine, rounds: int) -> None:
+        if rounds % self.check_every:
+            return
+        self.checks += 1
+        sch = engine.scheduler
+        try:
+            sch.pool.validate()
+        except AssertionError as e:  # pragma: no cover - failure path
+            self.failures.append(f"engine {engine.engine_id}: {e}")
+        active = {rid for rid in sch.active if rid is not None}
+        stale = set(sch._chunk_cursor) - active
+        if stale:  # pragma: no cover - failure path
+            self.failures.append(
+                f"engine {engine.engine_id}: stale chunk cursors {stale}"
+            )
+        if set(sch._chunk_lane) - set(sch._chunk_cursor):
+            self.failures.append(  # pragma: no cover - failure path
+                f"engine {engine.engine_id}: leaked chunk lanes"
+            )
+
+
+def _replay_check(records, engines) -> list[str]:
+    """The tracker conservation law: stream replay == live summaries."""
+    from repro.runtime.tracker import replay_summary
+
+    errs = []
+    for e in engines:
+        rep = replay_summary(records, engine=e.engine_id)
+        summ = e.summary()
+        for k in (
+            "completed", "handoffs", "prefill_steps", "prefill_tokens",
+            "decode_steps", "generated_tokens", "prefix_hits",
+            "prefix_hit_tokens",
+        ):
+            if rep[k] != summ[k]:
+                errs.append(
+                    f"engine {e.engine_id}: replayed {k}={rep[k]} != "
+                    f"live {summ[k]}"
+                )
+    return errs
+
+
+# ---------------- the soak ----------------
+
+
+def run_soak(
+    *,
+    virtual_hours: float = 1.0,
+    n_segments: int = 4,
+    requests_per_segment: int = 8,
+    seed: int = 0,
+    check_every: int = 8,
+    trace_out=None,
+) -> dict:
+    """Run both phases; returns the summary dict (one trajectory entry)."""
+    import math
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import lm
+    from repro.runtime.cluster import (
+        DisaggCluster,
+        FleetCluster,
+        SloPolicy,
+        StepCostModel,
+        TrafficSpec,
+    )
+    from repro.runtime.cluster.traffic import slo_report
+    from repro.runtime.tracker import JsonlTracker, NullTracker, read_jsonl
+
+    t_wall = time.monotonic()
+    rng = np.random.default_rng(seed)
+    cfg = get_smoke_config("smollm_360m")
+    params = lm.init_params(cfg, jax.random.key(0))
+    cost = StepCostModel.for_config(get_config("smollm_360m"), slots=SLOTS)
+    # arrivals pace the virtual clock: idle engines jump to the next
+    # burst, so span_s per segment buys the horizon directly
+    span_s = virtual_hours * 3600.0 / max(1, n_segments)
+    tracker = JsonlTracker(trace_out) if trace_out else NullTracker()
+
+    cluster = FleetCluster(
+        cfg, params, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
+        block_tokens=BLOCK, cost=cost, policy="prefix-aware",
+        prefix_cache=True, tracker=tracker,
+    )
+    probe = _Probe(check_every)
+    history: dict[int, tuple] = {}
+    all_timings: dict = {}
+    errors: list[str] = []
+    rid0, drains, gen_reuse_hits, n_followups = 0, 0, 0, 0
+    total_output_tokens = 0
+    for seg in range(n_segments):
+        t0 = seg * span_s
+        trace, probes = _segment_trace(
+            rng, cfg.vocab, rid0=rid0, t0=t0, span_s=span_s,
+            n=requests_per_segment, history=history,
+            engines=cluster.engines,
+        )
+        n_followups += len(probes)
+        gen_reuse_hits += sum(
+            p["matched"] > p["parent_prompt_len"] for p in probes
+        )
+        drain_at = None
+        if seg % 2 == 1:  # churn: cycle one engine out mid-burst...
+            drain_at = ((seg // 2) % len(cluster.engines), t0 + 0.0005)
+        res = cluster.run(trace, drain_at=drain_at, round_hook=probe)
+        if drain_at is not None:  # ...and back in for the next segment
+            cluster.restore_engine(drain_at[0])
+            drains += 1
+        all_timings.update(res.timings)
+        # engines accumulate requests for their lifetime; score only the
+        # segment's own arrivals
+        by_rid = {r.rid: r for r in trace}
+        seg_done = 0
+        for rid, out in res.outputs.items():
+            creq = by_rid.get(rid)
+            if creq is None:
+                continue
+            seg_done += 1
+            if len(out) != creq.max_new_tokens:
+                errors.append(
+                    f"request {rid}: {len(out)} tokens, wanted "
+                    f"{creq.max_new_tokens}"
+                )
+            total_output_tokens += len(out)
+            history[creq.session] = (creq.prompt, out)
+        if seg_done != len(trace):
+            errors.append(
+                f"segment {seg}: {seg_done}/{len(trace)} completed"
+            )
+        rid0 += len(trace)
+    errors.extend(probe.failures)
+
+    fleet_generated = sum(
+        e.scheduler.stats.generated_tokens for e in cluster.engines
+    )
+    if fleet_generated != total_output_tokens:
+        errors.append(
+            f"token conservation: engines generated {fleet_generated}, "
+            f"clients received {total_output_tokens}"
+        )
+    clock_h = max(e.clock for e in cluster.engines) / 3600.0
+    if clock_h < virtual_hours * 0.95:
+        errors.append(
+            f"virtual horizon {clock_h:.2f}h < target {virtual_hours}h"
+        )
+    if n_followups and gen_reuse_hits == 0:
+        errors.append("no follow-up ever matched into generated tokens")
+    fleet_records = read_jsonl(trace_out) if trace_out else []
+    n_fleet_lines = len(fleet_records)
+    if trace_out:
+        errors.extend(_replay_check(fleet_records, cluster.engines))
+    slo = slo_report(all_timings, SloPolicy(ttft=SLO_TTFT_S, tpot=SLO_TPOT_S))
+    if slo.completed and slo.slo_met < slo.completed * 0.9:
+        errors.append(
+            f"SLO band: only {slo.slo_met}/{slo.completed} met "
+            f"(ttft<={SLO_TTFT_S}s, tpot<={SLO_TPOT_S}s)"
+        )
+
+    # phase 2: disaggregated prefill/decode on the same stream
+    spec = TrafficSpec(
+        vocab=cfg.vocab, n_requests=requests_per_segment,
+        arrival_rate=2000.0,
+        prompt_lens=((8, 0.5), (16, 0.5)), gen_lens=((4, 0.5), (8, 0.5)),
+        seed=seed + 1,
+    )
+    disagg = DisaggCluster(
+        cfg, params, n_engines=3, slots=SLOTS, max_len=MAX_LEN,
+        block_tokens=BLOCK, cost=cost, spec=spec, tracker=tracker,
+    )
+    from repro.runtime.cluster.traffic import synthesize
+
+    dres = disagg.run(synthesize(spec), round_hook=probe)
+    handoffs = sum(
+        e.scheduler.stats.handoffs for e in disagg.prefill_engines
+    )
+    if handoffs == 0:
+        errors.append("disagg phase produced no KV handoffs")
+    if len(dres.outputs) != spec.n_requests:
+        errors.append(
+            f"disagg: {len(dres.outputs)}/{spec.n_requests} completed"
+        )
+    if trace_out:
+        disagg_records = read_jsonl(trace_out)[n_fleet_lines:]
+        errors.extend(_replay_check(disagg_records, disagg.engines))
+    tracker.finish()
+
+    assert math.isfinite(clock_h)
+    return {
+        "virtual_hours": round(clock_h, 3),
+        "segments": n_segments,
+        "requests": rid0 + spec.n_requests,
+        "completed": slo.completed + len(dres.outputs),
+        "drains": drains,
+        "followups": n_followups,
+        "gen_reuse_hits": gen_reuse_hits,
+        "handoffs": handoffs,
+        "generated_tokens": fleet_generated
+        + sum(e.scheduler.stats.generated_tokens for e in disagg.engines),
+        "invariant_checks": probe.checks,
+        "trace_records": (
+            len(fleet_records) + len(disagg_records) if trace_out else 0
+        ),
+        "ttft_p95_s": round(slo.ttft_p95, 3),
+        "tpot_p95_s": round(slo.tpot_p95, 3),
+        "wall_s": round(time.monotonic() - t_wall, 2),
+        "errors": errors,
+        "ok": not errors,
+    }
+
+
+# ---------------- benchmarks.run contract ----------------
+
+
+def run() -> list[dict]:
+    """Smoke cell for the bench suite / CI: still >= 1 virtual hour (the
+    horizon is bought with arrival spacing, not wall clock)."""
+    summary = run_soak(
+        virtual_hours=1.0, n_segments=3, requests_per_segment=6,
+        trace_out="soak_trace.jsonl",
+    )
+    from benchmarks import trajectory
+
+    summary["timestamp"] = time.time()
+    trajectory.append_run(
+        {k: v for k, v in summary.items() if k != "errors"}, bench="soak"
+    )
+    return [{"bench": "soak", **summary, "errors": "; ".join(
+        summary["errors"]) or ""}]
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    for r in rows:
+        if not r["ok"]:
+            errs.append(f"soak invariants failed: {r['errors']}")
+        if r["virtual_hours"] < 0.95:
+            errs.append(f"soak horizon {r['virtual_hours']}h < 1h")
+        if r["invariant_checks"] == 0:
+            errs.append("the invariant probe never ran")
+        if r["followups"] and r["gen_reuse_hits"] == 0:
+            errs.append("no generated-token prefix reuse observed")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--virtual-hours", type=float, default=1.0)
+    ap.add_argument("--segments", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="arrivals per segment")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check-every", type=int, default=8,
+                    help="probe invariants every K engine rounds")
+    ap.add_argument("--trace-out", default="soak_trace.jsonl",
+                    help="JSONL tracker stream ('' disables)")
+    ap.add_argument("--out", default="soak_bench.json")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="do not append to BENCH_trajectory.json")
+    args = ap.parse_args(argv)
+    summary = run_soak(
+        virtual_hours=args.virtual_hours,
+        n_segments=args.segments,
+        requests_per_segment=args.requests,
+        seed=args.seed,
+        check_every=args.check_every,
+        trace_out=args.trace_out or None,
+    )
+    summary["timestamp"] = time.time()
+    print(json.dumps(summary, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"[soak_bench] wrote {args.out}")
+    if not args.no_trajectory:
+        from benchmarks import trajectory
+
+        entry = trajectory.append_run(
+            {k: v for k, v in summary.items() if k != "errors"},
+            bench="soak",
+        )
+        print(
+            f"[soak_bench] trajectory run #{entry['run_index']} -> "
+            f"{trajectory.TRAJECTORY_PATH}"
+        )
+    for e in summary["errors"]:
+        print(f"  SOAK FAIL: {e}")
+    return 1 if summary["errors"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

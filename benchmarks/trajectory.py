@@ -1,0 +1,78 @@
+"""Persistent benchmark trajectory: one JSON file, one entry per run.
+
+The soak harness (and any other bench that opts in) appends a compact
+run summary to ``BENCH_trajectory.json`` at the repo root after every
+run. The file is an append-only list, so the repo accumulates a
+longitudinal record of soak results across sessions — regressions show
+up as a break in the series, not as a lost stdout line.
+
+Entries are whatever the caller passes plus bookkeeping (``bench``,
+``run_index``, optional ``timestamp`` supplied by the caller); nothing
+here interprets them beyond dedup-free appending. ``load_runs`` returns
+the list for reporting (``benchmarks/report.py`` renders the tail).
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/trajectory.py          # show tail
+    PYTHONPATH=src python benchmarks/trajectory.py --bench soak -n 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+TRAJECTORY_PATH = Path(__file__).resolve().parent.parent / (
+    "BENCH_trajectory.json"
+)
+
+
+def load_runs(path=None) -> list[dict]:
+    p = Path(path) if path is not None else TRAJECTORY_PATH
+    if not p.exists():
+        return []
+    with open(p) as fh:
+        data = json.load(fh)
+    if not isinstance(data, list):
+        raise ValueError(f"{p}: expected a JSON list, got {type(data)}")
+    return data
+
+
+def append_run(summary: dict, *, bench: str, path=None) -> dict:
+    """Append one run summary; returns the stored entry (with its
+    ``run_index``). The write is whole-file (read, append, rewrite):
+    the file stays a valid JSON list at every point."""
+    p = Path(path) if path is not None else TRAJECTORY_PATH
+    runs = load_runs(p)
+    entry = {"bench": bench, "run_index": len(runs), **summary}
+    runs.append(entry)
+    tmp = p.with_suffix(".json.tmp")
+    with open(tmp, "w") as fh:
+        json.dump(runs, fh, indent=2)
+        fh.write("\n")
+    tmp.replace(p)
+    return entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=None, help="trajectory file "
+                    f"(default {TRAJECTORY_PATH})")
+    ap.add_argument("--bench", default=None, help="filter by bench name")
+    ap.add_argument("-n", type=int, default=10, help="show the last N runs")
+    args = ap.parse_args(argv)
+    runs = load_runs(args.path)
+    if args.bench:
+        runs = [r for r in runs if r.get("bench") == args.bench]
+    if not runs:
+        print("(no recorded runs)")
+        return 0
+    for r in runs[-args.n :]:
+        print(json.dumps(r))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -80,6 +80,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-token SLO in virtual seconds")
     ap.add_argument("--quant", type=int, default=0, choices=[0, 1, 2])
     ap.add_argument("--json", default="", help="write the SLO report here")
+    ap.add_argument("--trace-out", default="",
+                    help="append one JSONL record per engine round "
+                         "(runtime.tracker stream, all engines interleaved; "
+                         "replay with runtime.tracker.replay_summary)")
     return ap
 
 
@@ -92,6 +96,11 @@ def build_cluster(cfg, full_cfg, params, args, spec):
     sampling = lm.SamplingParams(
         temperature=args.temperature, seed=args.seed
     )
+    tracker = None
+    if getattr(args, "trace_out", ""):
+        from repro.runtime.tracker import JsonlTracker
+
+        tracker = JsonlTracker(args.trace_out)
     common = dict(
         slots=args.slots,
         max_len=max_len,
@@ -100,6 +109,7 @@ def build_cluster(cfg, full_cfg, params, args, spec):
         sampling=sampling,
         prefix_cache=args.prefix_cache
         and cfg.family in PREFIX_CACHE_FAMILIES,
+        tracker=tracker,
     )
     n = 1 if args.mode == "single" else args.engines
     if args.mode == "disagg":
@@ -174,6 +184,9 @@ def main(argv=None) -> int:
         print(f"[fleet] placement: {e}")
 
     result = cluster.run(trace)
+    if cluster.tracker is not None:
+        cluster.tracker.finish()
+        print(f"[fleet] wrote round-level tracker stream {args.trace_out}")
     report = result.report(
         SloPolicy(ttft=args.slo_ttft, tpot=args.slo_tpot)
     )

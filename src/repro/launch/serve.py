@@ -79,6 +79,11 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
     prefix_cache = None
     if args.prefix_cache and cfg.family in PREFIX_CACHE_FAMILIES:
         prefix_cache = PrefixCache(pool)
+    tracker = None
+    if getattr(args, "trace_out", None):
+        from repro.runtime.tracker import JsonlTracker
+
+        tracker = JsonlTracker(args.trace_out)
     return Scheduler(
         cfg,
         params,
@@ -96,6 +101,7 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
         prefill_chunk=args.prefill_chunk or None,
         residency=build_residency_plan(cfg, args),
         prefix_cache=prefix_cache,
+        tracker=tracker,
     )
 
 
@@ -106,6 +112,8 @@ def run_pool_engine(cfg, params, args) -> dict:
     t0 = time.monotonic()
     stats = sched.run()
     dt = time.monotonic() - t0
+    if sched.tracker is not None:
+        sched.tracker.finish()
     outputs = sched.outputs()
     assert stats.completed == args.requests, (stats.completed, args.requests)
     assert all(len(v) == args.gen_len for v in outputs.values())
@@ -280,6 +288,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="MiB of VMEM for pinned weight blocks; decode "
                          "runs against the budgeted set, cold blocks "
                          "stream HBM->VMEM (0 = unbudgeted)")
+    ap.add_argument("--trace-out", default="",
+                    help="append one JSONL record per scheduler round "
+                         "(runtime.tracker stream; pool engine only)")
     return ap
 
 

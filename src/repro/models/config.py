@@ -34,10 +34,13 @@ ATTN_KV_FAMILIES = ("dense", "vlm", "moe")
 PAGED_FAMILIES = ATTN_KV_FAMILIES + ("hybrid",)
 
 # Families whose prompts can prefill in budget-sized chunks across rounds.
-# MoE is excluded (cross-token capacity routing) and hybrid is excluded
-# (the SSM state is sequential: a chunk would need the carried state of
-# every earlier chunk, which the pool does not hold).
-CHUNKABLE_FAMILIES = ("dense", "vlm")
+# MoE is excluded (cross-token capacity routing: padded/absent positions
+# change real tokens' expert assignment). Hybrid chunks statefully: the
+# scheduler carries the SSD/conv state between chunks through the same
+# carried-state kernels that power warm suffix prefill
+# (lm.prefill_suffix_paged_hybrid), so chunk boundaries are exact resume
+# points rather than approximations.
+CHUNKABLE_FAMILIES = ("dense", "vlm", "hybrid")
 
 # Families whose prompt KV can be served out of the radix prefix cache
 # (runtime.prefix_cache): a new request adopts the shared blocks of its

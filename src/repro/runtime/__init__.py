@@ -6,4 +6,13 @@ from repro.runtime.scheduler import (  # noqa: F401
     Scheduler,
 )
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.tracker import (  # noqa: F401
+    CompositeTracker,
+    JsonlTracker,
+    MemoryTracker,
+    NullTracker,
+    Tracker,
+    read_jsonl,
+    replay_summary,
+)
 from repro.runtime.train import TrainLoop, TrainLoopConfig  # noqa: F401

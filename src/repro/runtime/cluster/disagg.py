@@ -121,6 +121,7 @@ class DisaggCluster(FleetCluster):
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
+        tracker=None,
     ):
         # hybrids now disaggregate too: the PrefillHandoff payload carries
         # the SSM lane-state snapshot next to the KV-block rows
@@ -140,6 +141,7 @@ class DisaggCluster(FleetCluster):
             raise ValueError(f"bad split {split} for {n_engines} engines")
         self.cfg = cfg
         self.split = split
+        self.tracker = tracker
         mk = lambda i, role: Engine(
             i,
             cfg,
@@ -152,6 +154,7 @@ class DisaggCluster(FleetCluster):
             token_budget=token_budget,
             sampling=sampling,
             prefix_cache=prefix_cache,
+            tracker=tracker,
         )
         self.prefill_engines = [mk(i, "prefill") for i in range(n_p)]
         self.decode_engines = [mk(n_p + i, "decode") for i in range(n_d)]

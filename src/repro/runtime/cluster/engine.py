@@ -114,6 +114,7 @@ class Engine:
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
+        tracker=None,
     ):
         assert role in ("both", "prefill", "decode"), role
         self.engine_id = engine_id
@@ -122,6 +123,7 @@ class Engine:
         self.cost = cost
         self.clock = 0.0
         self.drained = False
+        self.tracker = tracker
         pool = KVPool.for_slots(
             cfg, slots=slots, max_len=max_len, block_tokens=block_tokens
         )
@@ -141,6 +143,28 @@ class Engine:
             handoff=self._on_handoff if role == "prefill" else None,
             prefix_cache=cache,
         )
+        # unified observability: intercept the scheduler's per-round
+        # record so it is logged with the *post-round* virtual clock and
+        # this engine's identity merged in (one record per round still)
+        self._pending_records: list[dict] = []
+        if tracker is not None:
+            self.scheduler.on_round = self._pending_records.append
+            tracker.log_hyperparameters(
+                {
+                    "surface": "engine",
+                    "engine": engine_id,
+                    "role": role,
+                    "arch": cfg.name,
+                    "family": cfg.family,
+                    "slots": slots,
+                    "max_len": max_len,
+                    "block_tokens": block_tokens,
+                    "token_budget": self.scheduler.token_budget,
+                    "prefix_cache": prefix_cache,
+                    "decode_s_per_step": cost.decode_s_per_step,
+                    "prefill_s_per_token": cost.prefill_s_per_token,
+                }
+            )
         self.outbox: list[tuple[float, PrefillHandoff]] = []
         self._imports: list[tuple[float, int]] = []  # (ready_at, rid)
         self._import_payloads: dict[int, PrefillHandoff] = {}
@@ -241,6 +265,7 @@ class Engine:
 
     def step_round(self) -> None:
         """One scheduler round, charged on the virtual clock."""
+        events_seen = len(self.events)
         self._try_imports()
         stats = self.scheduler.stats
         pt0 = stats.prefill_tokens
@@ -265,6 +290,18 @@ class Engine:
             + self.cost.round_overhead_s
         )
         self._collect_events()
+        # the scheduler's round record, stamped with the charged clock
+        # and this round's virtual-time first/done events
+        for rec in self._pending_records:
+            rec["engine"] = self.engine_id
+            rec["role"] = self.role
+            rec["clock_s"] = round(self.clock, 9)
+            rec["events"] = [
+                (kind, rid, round(t, 9))
+                for kind, rid, t in self.events[events_seen:]
+            ]
+            self.tracker.log_metrics(rec, step=rec["round"])
+        self._pending_records.clear()
 
     def _collect_events(self) -> None:
         for rid, req in self.scheduler.requests.items():
@@ -279,9 +316,15 @@ class Engine:
     # ---------------- drain ----------------
 
     def drain(self):
-        """Stop intake and hand queued requests back to the router."""
+        """Stop intake and hand queued (and mid-chunked-prefill)
+        requests back to the router."""
         self.drained = True
         return self.scheduler.drain()
+
+    def undrain(self) -> None:
+        """Reopen intake after a drain — soak churn cycles an engine out
+        (drain, requeue elsewhere) and back in without rebuilding it."""
+        self.drained = False
 
     def summary(self) -> dict:
         s = self.scheduler.stats

@@ -178,8 +178,10 @@ class FleetCluster:
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
+        tracker=None,
     ):
         self.cfg = cfg
+        self.tracker = tracker
         self.engines = [
             Engine(
                 i,
@@ -193,6 +195,7 @@ class FleetCluster:
                 token_budget=token_budget,
                 sampling=sampling,
                 prefix_cache=prefix_cache,
+                tracker=tracker,
             )
             for i in range(n_engines)
         ]
@@ -220,6 +223,13 @@ class FleetCluster:
         self.router.requeue([self._by_rid[r.rid] for r in moved])
         return [r.rid for r in moved]
 
+    def restore_engine(self, engine_id: int) -> None:
+        """Reopen a drained engine's intake (soak churn: engines cycle
+        out and back without being rebuilt, caches intact)."""
+        next(
+            e for e in self.engines if e.engine_id == engine_id
+        ).undrain()
+
     def _absorb_events(self, engine: Engine) -> None:
         for kind, rid, t in engine.events:
             timing = self.timings[rid]
@@ -235,8 +245,14 @@ class FleetCluster:
         *,
         drain_at: tuple[int, float] | None = None,
         max_rounds: int | None = None,
+        round_hook=None,
     ) -> FleetRunResult:
-        """Serve the trace to completion on the virtual clock."""
+        """Serve the trace to completion on the virtual clock.
+
+        ``round_hook(engine, round_index)``, when given, runs after every
+        engine round — the soak harness's periodic invariant probe
+        (pool ``validate()``, cursor/lane leak checks) without the run
+        loop knowing what an invariant is."""
         pending = deque(
             sorted(trace, key=lambda r: (r.t_arrival, r.rid))
         )
@@ -275,6 +291,8 @@ class FleetCluster:
             engine.step_round()
             self._absorb_events(engine)
             rounds += 1
+            if round_hook is not None:
+                round_hook(engine, rounds)
             if rounds > limit:
                 raise RuntimeError(
                     f"cluster failed to drain after {rounds} rounds"

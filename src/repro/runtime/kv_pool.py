@@ -205,6 +205,11 @@ class KVPool:
         # the attached prefix cache's eviction hook: (blocks needed) ->
         # blocks actually returned to the free list
         self.evictor: Callable[[int], int] | None = None
+        # lifetime counters (runtime.tracker records + soak conservation:
+        # alloc - freed always equals the referenced-block count)
+        self.alloc_blocks = 0
+        self.freed_blocks = 0
+        self.cow_copies = 0
 
     @classmethod
     def for_slots(
@@ -324,6 +329,7 @@ class KVPool:
             raise RuntimeError("pool free list empty and nothing evictable")
         b = self._free.pop()
         self._refs[b] = 1
+        self.alloc_blocks += 1
         return b
 
     def ensure_rows(self, rid: int, n_tokens: int) -> None:
@@ -406,6 +412,7 @@ class KVPool:
             self.v = _block_copy(self.v, jnp.asarray(dst), jnp.asarray(src))
             self._add_user(new)
             held.append(new)
+            self.cow_copies += 1
         self.note_tokens(rid, n_tokens)
 
     def release(self, rid: int) -> None:
@@ -421,6 +428,7 @@ class KVPool:
             if self._refs[b] == 0:
                 del self._refs[b]
                 self._free.append(b)
+                self.freed_blocks += 1
         del self._tokens[rid], self._committed[rid]
 
     # ---------------- prefix-cache pinning ----------------
@@ -448,6 +456,7 @@ class KVPool:
             del self._refs[block]
             self._free.append(block)
             self._evictable -= 1  # it was cache-only; now it is free
+            self.freed_blocks += 1
             return 1
         return 0
 
@@ -592,6 +601,13 @@ class KVPool:
             1 for b in self._cached if self._refs[b] == 1
         ):
             raise AssertionError("evictable-block tally drifted")
+        # lifetime conservation: every allocation is either still
+        # referenced or was returned to the free list exactly once
+        if self.alloc_blocks - self.freed_blocks != len(self._refs):
+            raise AssertionError(
+                f"block conservation violated: {self.alloc_blocks} allocated"
+                f" - {self.freed_blocks} freed != {len(self._refs)} live"
+            )
 
     def fragmentation_report(self) -> dict:
         """Baseline (private blocks) vs the ``pack_ffd`` tail-sharing bound.

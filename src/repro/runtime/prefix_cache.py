@@ -88,11 +88,32 @@ class PrefixCache:
         self.bt = pool.block_tokens
         self.root = _Node((), None, None, 0)
         self._nodes: set[_Node] = set()  # flat registry for eviction scans
+        # pin multiset: the pool holds ONE pin per cached block; a block
+        # can be pinned here by several units (an anchor's partial tail
+        # block becomes a full node when the finished conversation is
+        # re-committed with its generated tokens), so the pool pin is
+        # taken on the first retain and dropped on the last release
+        self._pins: dict[int, int] = {}
         self._clock = 0
         self.hits = 0
         self.lookups = 0
         self.evicted_blocks = 0
         pool.evictor = self.evict
+
+    def _retain(self, block: int) -> None:
+        n = self._pins.get(block, 0)
+        if n == 0:
+            self.pool.retain_cached(block)
+        self._pins[block] = n + 1
+
+    def _release_pin(self, block: int) -> int:
+        """Drop one cache-unit pin; returns blocks actually freed."""
+        n = self._pins[block] - 1
+        if n > 0:
+            self._pins[block] = n
+            return 0
+        del self._pins[block]
+        return self.pool.uncache(block)
 
     # ---------------- internals ----------------
 
@@ -217,7 +238,7 @@ class PrefixCache:
             child = node.children.get(key)
             if child is None:
                 child = _Node(key, blocks[i], node, self._tick())
-                self.pool.retain_cached(blocks[i])
+                self._retain(blocks[i])
                 node.children[key] = child
                 self._nodes.add(child)
             else:
@@ -231,7 +252,7 @@ class PrefixCache:
                     a.stamp = self._tick()
                     return
             if tail_block is not None:
-                self.pool.retain_cached(tail_block)
+                self._retain(tail_block)
             node.anchors.append(
                 _Anchor(tail, tail_block, len(toks), lane_state, self._tick())
             )
@@ -272,6 +293,7 @@ class PrefixCache:
                 # without reclaiming a block)
                 frees_tail = a.tail_block is not None and (
                     self.pool.ref_count(a.tail_block) == 1
+                    and self._pins.get(a.tail_block, 0) == 1
                 )
                 if frees_tail or rec:
                     heap.append((a.stamp, seq := seq + 1, node, a))
@@ -286,21 +308,41 @@ class PrefixCache:
                     continue  # already drained
                 node.anchors.remove(anchor)
                 if anchor.tail_block is not None:
-                    freed += self.pool.uncache(anchor.tail_block)
+                    freed += self._release_pin(anchor.tail_block)
                 exposed = node if reclaimable(node) else None
             else:
                 if node.children or node.anchors or node not in self._nodes:
                     continue  # condition changed since seeding
                 node.parent.children.pop(node.key)
                 self._nodes.discard(node)
-                freed += self.pool.uncache(node.block)
+                freed += self._release_pin(node.block)
                 exposed = (
                     node.parent if reclaimable(node.parent) else None
                 )
-            if exposed is not None and not exposed.anchors:
-                heapq.heappush(
-                    heap, (exposed.stamp, seq := seq + 1, exposed, None)
-                )
+                # a parent anchor sharing this block (pin multiset) may
+                # just have become the block's last pin — now a victim
+                for a in node.parent.anchors:
+                    if (
+                        a.tail_block is not None
+                        and self.pool.ref_count(a.tail_block) == 1
+                        and self._pins.get(a.tail_block, 0) == 1
+                    ):
+                        heapq.heappush(
+                            heap, (a.stamp, seq := seq + 1, node.parent, a)
+                        )
+            if exposed is not None:
+                if not exposed.anchors:
+                    heapq.heappush(
+                        heap, (exposed.stamp, seq := seq + 1, exposed, None)
+                    )
+                else:
+                    # the anchors are now the last thing keeping a
+                    # reclaimable node alive — victims they weren't at
+                    # seed time (re-pushes are deduped at pop)
+                    for a in exposed.anchors:
+                        heapq.heappush(
+                            heap, (a.stamp, seq := seq + 1, exposed, a)
+                        )
         self.evicted_blocks += freed
         return freed
 

@@ -209,6 +209,7 @@ class Scheduler:
         residency=None,
         handoff: Callable[[PrefillHandoff], None] | None = None,
         prefix_cache=None,
+        tracker=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -249,9 +250,11 @@ class Scheduler:
                 raise ValueError("prefix cache must index this pool")
         self.prefix_cache = prefix_cache
         self._prefill = _jitted_prefill(cfg)
+        # hybrid chunks through the carried-state suffix step below, not
+        # the stateless attention chunk step
         self._chunk_prefill = (
             _jitted_chunk_prefill(cfg)
-            if cfg.family in CHUNKABLE_FAMILIES
+            if cfg.family in CHUNKABLE_FAMILIES and cfg.family != "hybrid"
             else None
         )
         self._hybrid_suffix = (
@@ -264,6 +267,10 @@ class Scheduler:
         else:
             self._decode = _jitted_decode(cfg)
         self._chunk_cursor: dict[int, int] = {}
+        # hybrid chunked prefill: the carried SSD/conv state between a
+        # long prompt's chunks (leaves (L, 1, ...)), keyed like the
+        # cursor; installed into the lane slot on the final chunk
+        self._chunk_lane: dict[int, dict] = {}
         # hybrid: fixed-size per-lane SSM decode state, resident next to
         # the pool (the pool pages only the shared attention blocks' KV)
         self._lane_state = (
@@ -282,6 +289,32 @@ class Scheduler:
         self._table_dirty = False
         self._next_rid = 0
         self.stats = SchedulerStats()
+        # unified observability (runtime.tracker): one record per round,
+        # emitted either straight to ``tracker`` or through ``on_round``
+        # (a fleet Engine installs the hook so the record also carries
+        # the post-round virtual clock). Counters are emitted as deltas
+        # against ``_emit_base`` so replaying a stream reproduces the
+        # totals exactly, wherever the counters were advanced.
+        self.tracker = tracker
+        self.on_round: Callable[[dict], None] | None = None
+        self._emit_base: dict[str, int] = {}
+        self._emit_ttft_base = 0
+        if tracker is not None:
+            tracker.log_hyperparameters(
+                {
+                    "surface": "scheduler",
+                    "arch": cfg.name,
+                    "family": cfg.family,
+                    "slots": slots,
+                    "max_len": max_len,
+                    "token_budget": self.token_budget,
+                    "decode_per_round": self.decode_per_round,
+                    "prefill_chunk": self.prefill_chunk,
+                    "block_tokens": pool.block_tokens,
+                    "pool_blocks": pool.usable_blocks,
+                    "prefix_cache": prefix_cache is not None,
+                }
+            )
 
     # ---------------- submission ----------------
 
@@ -310,23 +343,18 @@ class Scheduler:
             )
         # prompts over the admission token budget are legal for chunkable
         # families: they admit solo and prefill in budget-sized chunks
-        # across rounds. MoE prompts must prefill in one unpadded shot
-        # (cross-token capacity routing) and hybrid prompts in one
-        # stateful shot (the SSD state is sequential), so for those the
-        # budget stays a hard cap.
+        # across rounds (hybrid carries the SSD/conv state between
+        # chunks). MoE prompts must prefill in one unpadded shot —
+        # capacity routing is cross-token — so there the budget stays a
+        # hard cap.
         if (
             total > self.token_budget
             and self.cfg.family not in CHUNKABLE_FAMILIES
         ):
-            why = (
-                "moe prompts cannot chunk: capacity routing is cross-token"
-                if self.cfg.family == "moe"
-                else f"{self.cfg.family} prompts cannot chunk: the SSM "
-                "state is sequential across chunks"
-            )
             raise ValueError(
                 f"request needs {total} tokens > token budget "
-                f"{self.token_budget} ({why})"
+                f"{self.token_budget} ({self.cfg.family} prompts cannot "
+                "chunk: capacity routing is cross-token)"
             )
         if rid is None:
             rid = self._next_rid
@@ -341,11 +369,36 @@ class Scheduler:
         return rid
 
     def drain(self) -> list[Request]:
-        """Stop intake: pop and return every not-yet-admitted request so a
-        router can requeue it elsewhere (sampling is rid-keyed, so the
-        token stream survives the move). In-flight prefill/decode
-        requests finish here normally."""
+        """Stop intake: pop and return every request this engine can
+        still give up, so a router can requeue it elsewhere (sampling is
+        rid-keyed, so the token stream survives the move).
+
+        That covers the queue *and* any mid-flight chunked prefill: a
+        request whose ``_chunk_cursor`` is live has a lane reserved and
+        pool blocks partially written, but no token sampled yet — its
+        blocks are released (refcounts make adopted prefix blocks safe),
+        its cursor and carried hybrid chunk state dropped, and its lane
+        returned, so the requeued request restarts cold with nothing
+        leaked here. Decoding requests finish here normally (their
+        sampled tokens exist only on this engine)."""
         out: list[Request] = []
+        # aborted chunked prefills first: they are older than anything
+        # still queued, and requeue order preserves FIFO fairness
+        for slot, rid in enumerate(self.active):
+            if rid is None or rid not in self._chunk_cursor:
+                continue
+            req = self.requests.pop(rid)
+            del self._chunk_cursor[rid]
+            self._chunk_lane.pop(rid, None)
+            self.pool.release(rid)
+            self.active[slot] = None
+            self._token[slot, 0] = 0
+            self._lengths[slot] = 0
+            self._row_table[slot] = self.pool.scratch_rows(self.s_max)
+            self._table_dirty = True
+            req.output.clear()
+            req._enter(RequestState.QUEUED)
+            out.append(req)
         while self.queue:
             req = self.queue.popleft()
             del self.requests[req.rid]
@@ -558,17 +611,23 @@ class Scheduler:
             self.stats.prefix_hits += 1
             self.stats.prefix_hit_tokens += match.matched
 
-        if self.cfg.family == "hybrid" and match is not None:
-            self._prefill_hybrid_suffix(slot, req, match)
-            return True
-
         if self.cfg.family in CHUNKABLE_FAMILIES and (
             match is not None or p > self.prefill_chunk
         ):
             # chunked prefill: reserve the lane now, feed chunks per
-            # round, starting past the matched prefix (0 on a miss)
+            # round, starting past the matched prefix (0 on a miss).
+            # Hybrid chunks resume the SSD/conv recurrence from the
+            # carried state: the anchor's snapshot on a warm hit, the
+            # zero state cold — a warm suffix within one chunk is
+            # exactly the old single-shot suffix prefill.
             self.active[slot] = req.rid
             self._chunk_cursor[req.rid] = match.matched if match else 0
+            if self.cfg.family == "hybrid":
+                self._chunk_lane[req.rid] = (
+                    jax.tree.map(jnp.asarray, match.lane_state)
+                    if match is not None
+                    else init_ssm_lane_state(self.cfg, 1)
+                )
             self._prefill_one_chunk(slot)
             return True
 
@@ -608,47 +667,17 @@ class Scheduler:
         self._start_decode(slot, req, first)
         return True
 
-    def _prefill_hybrid_suffix(self, slot: int, req: Request, match) -> None:
-        """Warm hybrid prefill: resume the SSM recurrence from the
-        anchor's snapshot and prefill only the unmatched suffix, with the
-        matched prefix's shared-attention KV gathered from the adopted
-        pool blocks. One unpadded step (one trace per suffix length, the
-        hybrid prefill rule)."""
-        rid = req.rid
-        m = match.matched
-        p = len(req.prompt)
-        self.pool.note_tokens(rid, p)
-        suffix = req.prompt[m:]
-        n = len(suffix)
-        write_rows = self.pool.rows_of(rid)[m:p][None]
-        row_table = self.pool.rows_of(rid, pad_to=self.s_max)[None]
-        # the anchor snapshot is the step's initial state; the lane slot
-        # is overwritten with the post-suffix state below
-        lane = jax.tree.map(jnp.asarray, match.lane_state)
-        logits, self.pool.k, self.pool.v, new_lane = self._hybrid_suffix(
-            self.params,
-            jnp.asarray(suffix[None]),
-            self.pool.k,
-            self.pool.v,
-            jnp.asarray(row_table),
-            jnp.asarray(write_rows),
-            jnp.asarray(m, jnp.int32),
-            jnp.asarray(n - 1, jnp.int32),
-            lane,
-        )
-        self._lane_state = jax.tree.map(
-            lambda dst, src: dst.at[:, slot].set(src[:, 0]),
-            self._lane_state,
-            new_lane,
-        )
-        self.stats.prefill_steps += 1
-        self.stats.prefill_tokens += n
-        first = self._sample_one(req, np.asarray(logits[0, 0, :]))
-        self.active[slot] = rid
-        self._start_decode(slot, req, first)
-
     def _prefill_one_chunk(self, slot: int) -> None:
-        """Run one ``prefill_chunk``-sized piece of a long prompt."""
+        """Run one ``prefill_chunk``-sized piece of a long prompt.
+
+        Attention families pad the chunk to the fixed chunk width with
+        scratch rows (one trace total). Hybrid chunks run *unpadded* —
+        the SSD state integrates every fed position, so a padded tail
+        would pollute the carried state — and thread ``_chunk_lane``
+        through ``lm.prefill_suffix_paged_hybrid``: each chunk resumes
+        the recurrence exactly where the previous one stopped, which is
+        why chunked hybrid prefill is token-identical to single-shot.
+        """
         rid = self.active[slot]
         req = self.requests[rid]
         c0 = self._chunk_cursor[rid]
@@ -656,35 +685,80 @@ class Scheduler:
         c = self.prefill_chunk
         n = min(c, p - c0)
         self.pool.note_tokens(rid, c0 + n)
-        scratch = int(self.pool.scratch_rows(1)[0])
         rows = self.pool.rows_of(rid)[c0 : c0 + n]
-        write_rows = np.full((1, c), scratch, np.int32)
-        write_rows[0, :n] = rows
-        tokens = np.zeros((1, c), np.int32)
-        tokens[0, :n] = req.prompt[c0 : c0 + n]
         row_table = self.pool.rows_of(rid, pad_to=self.s_max)[None]
-        logits, self.pool.k, self.pool.v = self._chunk_prefill(
-            self.params,
-            jnp.asarray(tokens),
-            self.pool.k,
-            self.pool.v,
-            jnp.asarray(row_table),
-            jnp.asarray(write_rows),
-            jnp.asarray(c0, jnp.int32),
-            jnp.asarray(n - 1, jnp.int32),
-        )
+        if self.cfg.family == "hybrid":
+            logits, self.pool.k, self.pool.v, new_lane = self._hybrid_suffix(
+                self.params,
+                jnp.asarray(req.prompt[c0 : c0 + n][None]),
+                self.pool.k,
+                self.pool.v,
+                jnp.asarray(row_table),
+                jnp.asarray(rows[None]),
+                jnp.asarray(c0, jnp.int32),
+                jnp.asarray(n - 1, jnp.int32),
+                self._chunk_lane[rid],
+            )
+            self._chunk_lane[rid] = new_lane
+        else:
+            scratch = int(self.pool.scratch_rows(1)[0])
+            write_rows = np.full((1, c), scratch, np.int32)
+            write_rows[0, :n] = rows
+            tokens = np.zeros((1, c), np.int32)
+            tokens[0, :n] = req.prompt[c0 : c0 + n]
+            logits, self.pool.k, self.pool.v = self._chunk_prefill(
+                self.params,
+                jnp.asarray(tokens),
+                self.pool.k,
+                self.pool.v,
+                jnp.asarray(row_table),
+                jnp.asarray(write_rows),
+                jnp.asarray(c0, jnp.int32),
+                jnp.asarray(n - 1, jnp.int32),
+            )
         self.stats.prefill_steps += 1
         self.stats.prefill_tokens += n
         self._chunk_cursor[rid] = c0 + n
         if c0 + n >= p:
             del self._chunk_cursor[rid]
+            if self.cfg.family == "hybrid":
+                # the post-prompt state moves into the decode lane slot
+                lane = self._chunk_lane.pop(rid)
+                self._lane_state = jax.tree.map(
+                    lambda dst, src: dst.at[:, slot].set(src[:, 0]),
+                    self._lane_state,
+                    lane,
+                )
             first = self._sample_one(req, np.asarray(logits[0, 0, :]))
             self._start_decode(slot, req, first)
+
+    def _commit_generated(self, slot: int, req: Request) -> None:
+        """Re-index the finished conversation — prompt *plus* generated
+        tokens — so a multi-turn follow-up (prompt = this prompt + this
+        response + new text) adopts the whole transcript's blocks, not
+        just the original prompt's. The last sampled token was never fed
+        back through the model and has no KV row, so the committed
+        sequence stops one short of the full output. Must run before
+        ``pool.release``: the cache pins blocks of a live request."""
+        if self.prefix_cache is None:
+            return
+        seq = np.concatenate(
+            [req.prompt, np.asarray(req.output[:-1], np.int32)]
+        )
+        if len(seq) == len(req.prompt):
+            return  # 1-token request: the prompt commit already covers it
+        lane = (
+            self._lane_snapshot(slot) if self.cfg.family == "hybrid" else None
+        )
+        self.prefix_cache.commit(
+            seq, self.pool.blocks_of(req.rid), lane_state=lane
+        )
 
     def _complete(self, slot: int) -> None:
         rid = self.active[slot]
         req = self.requests[rid]
         req._enter(RequestState.DONE)
+        self._commit_generated(slot, req)
         self.pool.release(rid)
         self.active[slot] = None
         self._token[slot, 0] = 0
@@ -770,6 +844,68 @@ class Scheduler:
             self._decode_step()
         self.stats.decode_time += time.monotonic() - t0
         self.stats.rounds += 1
+        if self.tracker is not None or self.on_round is not None:
+            self._emit_round()
+
+    # ---------------- observability ----------------
+
+    _DELTA_FIELDS = (
+        "prefill_steps",
+        "prefill_tokens",
+        "decode_steps",
+        "generated_tokens",
+        "completed",
+        "handoffs",
+        "prefix_hits",
+        "prefix_hit_tokens",
+    )
+
+    def _emit_round(self) -> None:
+        """One structured record per round (see ``runtime.tracker``).
+
+        Counters are deltas against the previous emission — not against
+        the round's start — so work done outside ``round()`` (a decode
+        engine's ``import_prefilled``, a drain) is still accounted to
+        the next record and replaying the stream reproduces the totals
+        exactly."""
+        s = self.stats
+        rec: dict = {"round": s.rounds}
+        for k in self._DELTA_FIELDS:
+            cur = getattr(s, k)
+            rec[k] = cur - self._emit_base.get(k, 0)
+            self._emit_base[k] = cur
+        rec["ttfts"] = [
+            round(t, 6) for t in s.ttfts[self._emit_ttft_base :]
+        ]
+        self._emit_ttft_base = len(s.ttfts)
+        rec["queued"] = len(self.queue)
+        rec["queued_tokens"] = sum(r.total_tokens for r in self.queue)
+        rec["active"] = sum(r is not None for r in self.active)
+        rec["committed_tokens"] = self.committed_tokens
+        rec["chunked_prefills"] = len(self._chunk_cursor)
+        p = self.pool.stats()
+        rec.update(
+            pool_utilization=round(p.utilization, 4),
+            pool_free_blocks=p.free_blocks,
+            pool_held_blocks=p.held_blocks,
+            pool_shared_blocks=p.shared_blocks,
+            pool_cached_blocks=p.cached_blocks,
+            pool_evictable_blocks=p.evictable_blocks,
+            pool_alloc_blocks=self.pool.alloc_blocks,
+            pool_freed_blocks=self.pool.freed_blocks,
+            pool_cow_copies=self.pool.cow_copies,
+        )
+        if self.prefix_cache is not None:
+            c = self.prefix_cache.stats()
+            rec.update(
+                cache_nodes=c["nodes"],
+                cache_anchors=c["anchors"],
+                cache_evicted_blocks=c["evicted_blocks"],
+            )
+        if self.on_round is not None:
+            self.on_round(rec)
+        else:
+            self.tracker.log_metrics(rec, step=s.rounds)
 
     def run(self, max_rounds: int | None = None) -> SchedulerStats:
         """Drain the queue to empty and finish every in-flight request."""

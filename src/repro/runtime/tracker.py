@@ -1,0 +1,207 @@
+"""Unified serve observability: one tracker, one record per serve round.
+
+The paper's argument is only as good as its measurements — FCMP (§IV-V)
+is sold entirely on measured utilization/throughput bands, and the
+serving reproduction had grown four ad-hoc stats surfaces to mirror
+that: ``SchedulerStats``, ``KVPool.stats()``, ``PrefixCache.stats()``
+and ``Engine.summary()``. This module replaces their ad-hoc consumption
+with a single append-only stream: every scheduler round emits exactly
+one structured record that merges the scheduler's counter *deltas* since
+the previous record with the pool/cache *gauges* at emission time (and,
+under a fleet engine, the engine id and post-round virtual clock).
+
+The interface is levanter's tracker shape: ``log_hyperparameters`` once
+per run, step-keyed ``log_metrics`` per round, ``finish`` at shutdown.
+Backends: ``JsonlTracker`` (one JSON object per line — greppable,
+mergeable by ``benchmarks/merge_runs.py``), ``MemoryTracker`` (tests and
+in-process replay checks), ``NullTracker`` (explicit no-op), and
+``CompositeTracker`` (fan-out, e.g. JSONL to disk + memory for asserts).
+
+Because per-round counters are emitted as deltas, the stream is
+*replayable*: summing a run's records (``replay_summary``) reproduces
+the scheduler/engine totals exactly — the soak harness's acceptance
+check, and the property that makes a trace a complete account of the
+run rather than a lossy sample of it.
+
+Record schema (``kind="metrics"``, one per round):
+
+    round                 scheduler round index (the step key)
+    queued/queued_tokens  intake backlog at end of round   [gauge]
+    active                busy decode lanes                [gauge]
+    committed_tokens      admitted token commitment        [gauge]
+    prefill_steps/_tokens, decode_steps, generated_tokens,
+    completed, handoffs, prefix_hits, prefix_hit_tokens    [deltas]
+    ttfts                 wall-clock TTFTs recorded this round
+    pool_*                KVPool gauges (utilization, free/held/shared/
+                          cached/evictable blocks) + cumulative
+                          alloc/freed/cow counters
+    cache_*               radix-cache gauges when a cache is attached
+    engine/role/clock_s   added by ``cluster.Engine`` (virtual clock
+                          *after* the round's cost is charged)
+    events                engine-level (kind, rid, t_virtual) TTFT/done
+                          events collected this round
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+
+def jsonable(obj: Any) -> Any:
+    """Recursively coerce numpy scalars/arrays and tuples for json."""
+    if isinstance(obj, dict):
+        return {str(k): jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, (bool, int, float, str)) or obj is None:
+        return obj
+    return str(obj)
+
+
+class Tracker:
+    """Interface: ``log_hyperparameters`` once, ``log_metrics`` per step."""
+
+    def log_hyperparameters(self, hparams: dict) -> None:
+        raise NotImplementedError
+
+    def log_metrics(self, metrics: dict, *, step: int) -> None:
+        raise NotImplementedError
+
+    def finish(self) -> None:  # optional flush/close
+        pass
+
+
+class NullTracker(Tracker):
+    """Discards everything (the default for tests and bare schedulers)."""
+
+    def log_hyperparameters(self, hparams: dict) -> None:
+        pass
+
+    def log_metrics(self, metrics: dict, *, step: int) -> None:
+        pass
+
+
+class MemoryTracker(Tracker):
+    """Keeps records in-process: replay checks without file round-trips."""
+
+    def __init__(self):
+        self.hparams: list[dict] = []
+        self.records: list[dict] = []
+
+    def log_hyperparameters(self, hparams: dict) -> None:
+        self.hparams.append(dict(hparams))
+
+    def log_metrics(self, metrics: dict, *, step: int) -> None:
+        self.records.append({**metrics, "step": step})
+
+
+class JsonlTracker(Tracker):
+    """Appends one JSON object per line to ``path``.
+
+    Lines carry ``kind`` ("hparams" or "metrics") so a mixed stream from
+    several engines sharing one tracker stays self-describing.
+    """
+
+    def __init__(self, path):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._fh = open(self.path, "a")
+        self.n_records = 0
+
+    def log_hyperparameters(self, hparams: dict) -> None:
+        self._write({"kind": "hparams", **jsonable(hparams)})
+
+    def log_metrics(self, metrics: dict, *, step: int) -> None:
+        self._write({"kind": "metrics", "step": step, **jsonable(metrics)})
+        self.n_records += 1
+
+    def _write(self, obj: dict) -> None:
+        self._fh.write(json.dumps(obj) + "\n")
+        self._fh.flush()
+
+    def finish(self) -> None:
+        self._fh.close()
+
+
+class CompositeTracker(Tracker):
+    """Fans every call out to several backends."""
+
+    def __init__(self, *trackers: Tracker):
+        self.trackers = trackers
+
+    def log_hyperparameters(self, hparams: dict) -> None:
+        for t in self.trackers:
+            t.log_hyperparameters(hparams)
+
+    def log_metrics(self, metrics: dict, *, step: int) -> None:
+        for t in self.trackers:
+            t.log_metrics(metrics, step=step)
+
+    def finish(self) -> None:
+        for t in self.trackers:
+            t.finish()
+
+
+def read_jsonl(path) -> list[dict]:
+    """Load a ``JsonlTracker`` stream back into records."""
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+# counter keys whose per-round values are deltas (summable on replay)
+DELTA_KEYS = (
+    "prefill_steps",
+    "prefill_tokens",
+    "decode_steps",
+    "generated_tokens",
+    "completed",
+    "handoffs",
+    "prefix_hits",
+    "prefix_hit_tokens",
+)
+
+
+def replay_summary(records: list[dict], engine: int | None = None) -> dict:
+    """Reconstruct run totals from a metrics stream.
+
+    Sums the delta counters (and concatenates TTFT events) across the
+    selected records; the result must equal the live
+    ``SchedulerStats``/``Engine.summary()`` totals — the tracker's
+    conservation property. ``engine`` filters a multi-engine stream.
+    """
+    rows = [
+        r
+        for r in records
+        if r.get("kind", "metrics") == "metrics"
+        and (engine is None or r.get("engine") == engine)
+    ]
+    out: dict = {k: 0 for k in DELTA_KEYS}
+    ttfts: list[float] = []
+    for r in rows:
+        for k in DELTA_KEYS:
+            out[k] += r.get(k, 0)
+        ttfts.extend(r.get("ttfts", ()))
+    out["rounds"] = len(rows)
+    out["ttfts"] = ttfts
+    out["mean_ttft"] = sum(ttfts) / len(ttfts) if ttfts else 0.0
+    if rows:
+        last = rows[-1]
+        for k in ("clock_s", "pool_utilization", "pool_cached_blocks"):
+            if k in last:
+                out[k] = last[k]
+    return out

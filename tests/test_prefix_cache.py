@@ -173,11 +173,13 @@ def test_warm_serving_token_identical_and_charges_suffix_only():
     warm = _serve_waves(warm_s, waves)
     assert warm == cold
     st = warm_s.stats
-    # base misses (only its 2 *full* blocks = 8 tokens get cached); ext
-    # matches those 8; once ext commits, sib matches 9 — one token into
-    # ext's third block, the mid-block COW case
-    assert st.prefix_hit_tokens == 8 + 9
-    assert st.prefill_tokens == 10 + (16 - 8) + (16 - 9)
+    # base misses; at completion it commits prompt + generated tokens
+    # (13 of 14 — the last sampled token never entered the KV), so ext
+    # matches 10: its 2 full prompt blocks plus 2 tokens into base's
+    # generated block (mid-block COW). Once ext commits, sib matches 9 —
+    # one token into the third block.
+    assert st.prefix_hit_tokens == 10 + 9
+    assert st.prefill_tokens == 10 + (16 - 10) + (16 - 9)
     assert st.prefix_hits == 2
     assert st.shared_blocks_peak >= 2  # ext and sib alias base's blocks
 
@@ -300,3 +302,84 @@ def test_moe_rejects_prefix_cache():
             cfg, params, pool, slots=2, max_len=MAX_LEN,
             prefix_cache=PrefixCache(pool),
         )
+
+
+# ---------------- generated-token re-indexing (ISSUE 6) ----------------
+
+
+def test_followup_adopts_generated_tokens():
+    """A finished request re-commits prompt + generated tokens, so a
+    multi-turn follow-up (prior prompt + prior response + new text)
+    matches past the original prompt into the *generated* region."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(13)
+    base = _prompt(rng, 10, cfg.vocab)
+
+    warm_s = _sched(cfg, params, cached=True)
+    warm_s.submit(base, GEN)
+    warm_s.run()
+    reply = warm_s.outputs()[0]
+    assert len(reply) == GEN
+    followup = np.concatenate(
+        [base, np.asarray(reply, np.int32), _prompt(rng, 5, cfg.vocab)]
+    )
+    # committed seq = 10 prompt + 3 generated (the last sampled token
+    # never entered the KV) = 13 -> 3 full blocks; the follow-up matches
+    # all 12 block-aligned tokens, 2 of them generated
+    assert warm_s.prefix_cache.match_tokens(followup) == 12
+    assert len(base) < 12
+
+    warm_s.submit(followup, GEN)
+    warm_s.run()
+    warm = warm_s.outputs()
+
+    cold_s = _sched(cfg, params, cached=False)
+    for p in (base, followup):
+        cold_s.submit(p, GEN)
+        cold_s.run()
+    assert warm == cold_s.outputs()
+    st = warm_s.stats
+    assert st.prefix_hit_tokens == 12
+    assert st.prefill_tokens == 10 + (len(followup) - 12)
+
+
+def test_hybrid_followup_resumes_at_conversation_end():
+    """Hybrid completion commits an anchor at the *conversation* end
+    (prompt + generated), so the canonical multi-turn follow-up resumes
+    the SSM state there and prefills only the new turn — and the block
+    that was the prompt anchor's partial tail (now a full node: the pin
+    multiset case) evicts exactly once with nothing leaked."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(14)
+    base = _prompt(rng, 9, cfg.vocab)  # unaligned: anchor pins a tail
+
+    warm_s = _sched(cfg, params, cached=True)
+    warm_s.submit(base, GEN)
+    warm_s.run()
+    reply = warm_s.outputs()[0]
+    followup = np.concatenate(
+        [base, np.asarray(reply, np.int32), _prompt(rng, 6, cfg.vocab)]
+    )
+    # completion anchor sits at 9 + 3 = 12 consumed tokens
+    assert warm_s.prefix_cache.match_tokens(followup, anchor=True) == 12
+
+    warm_s.submit(followup, GEN)
+    warm_s.run()
+    warm = warm_s.outputs()
+    cold_s = _sched(cfg, params, cached=False)
+    for p in (base, followup):
+        cold_s.submit(p, GEN)
+        cold_s.run()
+    assert warm == cold_s.outputs()
+    st = warm_s.stats
+    assert st.prefix_hit_tokens >= 12
+    assert st.prefill_tokens == 9 + (len(followup) - st.prefix_hit_tokens)
+
+    # full eviction releases the double-pinned block exactly once
+    cache = warm_s.prefix_cache
+    cache.evict(warm_s.pool.usable_blocks)
+    assert warm_s.pool.cached_blocks == 0
+    warm_s.pool.validate()
+    assert warm_s.pool.free_blocks == warm_s.pool.usable_blocks

@@ -462,17 +462,32 @@ def test_hybrid_staggered_lanes_independent():
         assert together[i] == outputs_of([p])[0], f"request {i} diverged"
 
 
-def test_hybrid_over_budget_prompt_rejected():
-    """Hybrid prompts cannot chunk (the SSD state is sequential): the
-    admission budget stays a hard submit-time cap, like MoE."""
+def test_hybrid_over_budget_prompt_chunks_token_identical():
+    """Hybrid prompts over the admission budget chunk instead of being
+    rejected (ISSUE 6): the carried-state suffix kernel makes chunk
+    resume well-defined — each chunk integrates its SSD state and hands
+    the lane to the next — so a budget-chunked prefill must emit exactly
+    the single-shot token stream."""
     cfg = get_smoke_config("zamba2_2p7b")
     params = lm.init_params(cfg, jax.random.key(0))
-    pool = KVPool.for_slots(cfg, slots=2, max_len=64, block_tokens=BLOCK)
-    sched = Scheduler(
-        cfg, params, pool, slots=2, max_len=64, token_budget=16
-    )
-    with pytest.raises(ValueError, match="cannot chunk"):
-        sched.submit(np.zeros(20, np.int32), GEN)
+    rng = np.random.default_rng(24)
+    long_p = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+
+    def run(budget):
+        pool = KVPool.for_slots(cfg, slots=2, max_len=64, block_tokens=BLOCK)
+        sched = Scheduler(
+            cfg, params, pool, slots=2, max_len=64, token_budget=budget
+        )
+        sched.submit(long_p, GEN)
+        stats = sched.run()
+        return sched.outputs()[0], stats
+
+    chunked, st_c = run(budget=16)  # 24-token prompt -> 16 + 8 chunks
+    single, st_s = run(budget=64)
+    assert st_s.prefill_steps == 1
+    assert st_c.prefill_steps == 2, "prompt must split into budget chunks"
+    assert chunked == single, "chunked hybrid prefill changed the tokens"
+    assert st_c.completed == st_s.completed == 1
 
 
 def test_pool_rejects_pure_ssm_only():
@@ -500,3 +515,90 @@ def test_moe_pool_prefill_is_unpadded():
     )
     ref_first = int(np.argmax(np.asarray(lg[0, 0])))
     assert sched.outputs()[0][0] == ref_first
+
+
+# ---------------- mid-chunk drain (ISSUE 6 regression) ----------------
+
+
+def _drain_mid_chunk(cfg, params, *, budget, rounds_after_admit, slots=2,
+                     max_len=64):
+    """Admit one over-budget prompt (admission runs its first chunk),
+    advance ``rounds_after_admit`` further rounds (one chunk each),
+    drain, and return (scheduler, drained requests, the prompt)."""
+    rng = np.random.default_rng(44)
+    long_p = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+    pool = KVPool.for_slots(
+        cfg, slots=slots, max_len=max_len, block_tokens=BLOCK
+    )
+    sched = Scheduler(
+        cfg, params, pool, slots=slots, max_len=max_len, token_budget=budget
+    )
+    sched.submit(long_p, GEN)
+    assert sched._admit_one()
+    for _ in range(rounds_after_admit):
+        sched.round()
+    assert sched._chunk_cursor, "request must still be mid-chunked-prefill"
+    return sched, sched.drain(), long_p
+
+
+@pytest.mark.parametrize("rounds", [0, 1])
+def test_drain_mid_chunked_prefill_leaks_nothing(rounds):
+    """Regression (ISSUE 6): draining while a chunked prefill is
+    in-flight must requeue the request cold — no pool blocks, no
+    ``_chunk_cursor`` entry, no lane reservation left behind — at every
+    chunk boundary (24-token prompt, chunk 8 -> cursors 8 and 16)."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.key(0))
+    sched, moved, long_p = _drain_mid_chunk(
+        cfg, params, budget=8, rounds_after_admit=rounds
+    )
+    assert [r.rid for r in moved] == [0]
+    assert moved[0].state is RequestState.QUEUED
+    assert moved[0].output == []
+    assert not sched._chunk_cursor and not sched._chunk_lane
+    assert all(slot is None for slot in sched.active)
+    sched.pool.validate()
+    assert sched.pool.free_blocks == sched.pool.usable_blocks
+    assert sched.pool.live_requests() == []
+
+    # the requeued request reproduces its exact single-shot stream
+    # (rid-keyed sampling): resubmit on a fresh scheduler under the
+    # same budget and compare against a large-budget single shot
+    def serve(budget):
+        pool = KVPool.for_slots(
+            cfg, slots=2, max_len=64, block_tokens=BLOCK
+        )
+        s = Scheduler(
+            cfg, params, pool, slots=2, max_len=64, token_budget=budget
+        )
+        s.submit(long_p, GEN, rid=moved[0].rid)
+        s.run()
+        return s.outputs()[moved[0].rid]
+
+    assert serve(8) == serve(64), "post-drain replay changed the tokens"
+
+
+def test_drain_mid_chunked_prefill_hybrid_releases_lane():
+    """The hybrid variant additionally reserves an SSM chunk lane; the
+    drain must drop it (and its carried state) with the cursor."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    sched, moved, long_p = _drain_mid_chunk(
+        cfg, params, budget=16, rounds_after_admit=0
+    )
+    assert [r.rid for r in moved] == [0]
+    assert not sched._chunk_cursor and not sched._chunk_lane
+    sched.pool.validate()
+    assert sched.pool.free_blocks == sched.pool.usable_blocks
+
+    # requeue on the same (now-drained, still-functional) scheduler:
+    # identical stream to an uninterrupted chunked run
+    sched.submit(long_p, GEN, rid=0)
+    sched.run()
+    pool2 = KVPool.for_slots(cfg, slots=2, max_len=64, block_tokens=BLOCK)
+    ref = Scheduler(
+        cfg, params, pool2, slots=2, max_len=64, token_budget=16
+    )
+    ref.submit(long_p, GEN)
+    ref.run()
+    assert sched.outputs()[0] == ref.outputs()[0]
