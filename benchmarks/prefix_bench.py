@@ -3,9 +3,11 @@
 A shared-prefix trace (multi-turn sessions whose prompts nest: turn t's
 prompt extends turn t-1's, the chat pattern prefix caching exists for)
 runs twice through the continuous-batching scheduler — once with the
-radix prefix cache attached to the KV pool, once without — for three
-arch variants: dense (smollm_360m smoke), FCMP-packed (w_bits=1), and
-hybrid (zamba2 smoke, whose cache anchors carry the SSM lane state).
+radix prefix cache attached to the KV pool, once without — for four
+arch variants: dense (smollm_360m smoke), FCMP-packed (w_bits=1),
+hybrid (zamba2 smoke, whose cache anchors carry the SSM lane state),
+and moe (olmoe smoke, cacheable since dropless per-token routing made
+a cached prefix's KV exactly what a cold prefill recomputes).
 
 Reported per row: prefill tokens actually computed, prompt tokens served
 from cached blocks (hit rate), steady-state pool utilization (Eq.-1
@@ -57,6 +59,7 @@ def _variants():
         ("smollm_360m", dense),
         ("smollm_360m", dataclasses.replace(dense, w_bits=1)),
         ("zamba2_2p7b", get_smoke_config("zamba2_2p7b")),
+        ("olmoe_1b_7b", get_smoke_config("olmoe_1b_7b")),
     )
 
 
@@ -165,8 +168,8 @@ def run() -> list[dict]:
 def check(rows: list[dict]) -> list[str]:
     errs = []
     cache_rows = [r for r in rows if r["mode"] == "cache"]
-    if len(cache_rows) != 3:
-        return [f"expected 3 cached variants, got {len(cache_rows)}"]
+    if len(cache_rows) != 4:
+        return [f"expected 4 cached variants, got {len(cache_rows)}"]
     for r in rows:
         tag = f"{r['arch']}/q{r['quant']}/{r['mode']}"
         if r["completed"] != 2 * SESSIONS * TURNS:

@@ -186,6 +186,39 @@ def soak_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def moe_table(recs: list[dict]) -> str:
+    """Render expert-load telemetry from a serve tracker stream (jsonl of
+    per-round metrics records): routed token-expert slots, normalized
+    expert-load entropy, and the fraction of routed tokens that hit a
+    residency-pinned ("hot") expert — the balance evidence behind the
+    dropless serving claim. One line per engine in the stream."""
+    from repro.runtime.tracker import replay_summary
+
+    rows = [r for r in recs if r.get("kind", "metrics") == "metrics"]
+    engines = sorted({r.get("engine") for r in rows}, key=lambda e: (e is None, e))
+    lines = [
+        "| engine | rounds | expert tokens | load entropy | hot-expert fraction |",
+        "|---|---|---|---|---|",
+    ]
+    for eng in engines:
+        s = replay_summary(rows, engine=eng)
+        lines.append(
+            "| {eng} | {rnd} | {et} | {ent} | {hot} |".format(
+                eng="—" if eng is None else eng,
+                rnd=s["rounds"], et=s["expert_tokens"],
+                ent=(
+                    f"{s['moe_expert_entropy']:.4f}"
+                    if "moe_expert_entropy" in s else "—"
+                ),
+                hot=(
+                    f"{s['moe_hot_expert_fraction']:.4f}"
+                    if "moe_hot_expert_fraction" in s else "—"
+                ),
+            )
+        )
+    return "\n".join(lines)
+
+
 def _load_rows(path: str) -> list[dict] | dict:
     """A single JSON document -> as parsed; a jsonl of flat records ->
     list (a jsonl's first line parses but leaves extra data, so the
@@ -240,6 +273,8 @@ if __name__ == "__main__":
         print(prefix_table(load_prefix(path)))
     elif which == "soak":
         print(soak_table(load_soak(path)))
+    elif which == "moe":
+        print(moe_table(load(path)))
     elif which == "roofline":
         print(roofline_table(load(path)))
     else:

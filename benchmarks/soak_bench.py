@@ -20,6 +20,12 @@ One soak run drives two phases over the same JSONL tracker stream:
   phase 2 (disagg): a 3-engine ``DisaggCluster`` serves one more burst,
   so KV-handoff payload accounting rides the same invariant probe.
 
+  phase 3 (moe): a 2-engine olmoe fleet under a small token budget
+  serves a burst whose last prompt exceeds every engine's budget — the
+  fleet-level chunked-admission regression (the router must place it,
+  not bounce it) — and the ``expert_tokens`` seam counter must replay
+  exactly from the stream.
+
 Invariants, probed every ``check_every`` engine rounds and at every
 phase end:
 
@@ -161,7 +167,7 @@ def _replay_check(records, engines) -> list[str]:
         for k in (
             "completed", "handoffs", "prefill_steps", "prefill_tokens",
             "decode_steps", "generated_tokens", "prefix_hits",
-            "prefix_hit_tokens",
+            "prefix_hit_tokens", "expert_tokens",
         ):
             if rep[k] != summ[k]:
                 errs.append(
@@ -316,23 +322,82 @@ def run_soak(
     if trace_out:
         disagg_records = read_jsonl(trace_out)[n_fleet_lines:]
         errors.extend(_replay_check(disagg_records, disagg.engines))
+    n_disagg_lines = n_fleet_lines + (
+        len(disagg_records) if trace_out else 0
+    )
+
+    # phase 3: moe burst — dropless per-token serving and fleet-level
+    # chunked admission ride the same stream. The burst includes one
+    # prompt larger than every engine's token budget; the router must
+    # place it (an idle chunkable engine streams it through
+    # budget-sized chunks) instead of bouncing it at offer().
+    from repro.runtime.cluster.traffic import ClientRequest
+
+    mcfg = get_smoke_config("olmoe_1b_7b")
+    mparams = lm.init_params(mcfg, jax.random.key(0))
+    mcost = StepCostModel.for_config(
+        get_config("olmoe_1b_7b"), slots=SLOTS
+    )
+    moe_budget = 24
+    mfresh = lambda k: rng.integers(0, mcfg.vocab, size=(k,)).astype(
+        np.int32
+    )
+    moe_trace = [
+        ClientRequest(i, 0.001 * i, mfresh(int(rng.integers(8, 17))),
+                      int(rng.choice((4, 8))), i)
+        for i in range(requests_per_segment - 1)
+    ]
+    over = requests_per_segment - 1
+    moe_trace.append(  # over-budget: 32 + 4 > moe_budget on every engine
+        ClientRequest(over, 0.001 * over, mfresh(32), 4, over)
+    )
+    moe_cluster = FleetCluster(
+        mcfg, mparams, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
+        block_tokens=BLOCK, cost=mcost, policy="prefix-aware",
+        prefix_cache=True, token_budget=moe_budget, tracker=tracker,
+    )
+    mres = moe_cluster.run(moe_trace, round_hook=probe)
+    if len(mres.outputs) != len(moe_trace):
+        errors.append(
+            f"moe burst: {len(mres.outputs)}/{len(moe_trace)} completed"
+        )
+    if len(mres.outputs.get(over, ())) != 4:
+        errors.append(
+            "moe burst: the over-budget prompt did not finish (fleet "
+            "chunked admission regressed)"
+        )
+    moe_expert_tokens = sum(
+        e.scheduler.stats.expert_tokens for e in moe_cluster.engines
+    )
+    if moe_expert_tokens == 0:
+        errors.append("moe burst routed no token through the dispatch")
+    if trace_out:
+        moe_records = read_jsonl(trace_out)[n_disagg_lines:]
+        errors.extend(_replay_check(moe_records, moe_cluster.engines))
     tracker.finish()
 
     assert math.isfinite(clock_h)
     return {
         "virtual_hours": round(clock_h, 3),
         "segments": n_segments,
-        "requests": rid0 + spec.n_requests,
-        "completed": slo.completed + len(dres.outputs),
+        "requests": rid0 + spec.n_requests + len(moe_trace),
+        "completed": slo.completed + len(dres.outputs) + len(mres.outputs),
         "drains": drains,
         "followups": n_followups,
         "gen_reuse_hits": gen_reuse_hits,
         "handoffs": handoffs,
+        "moe_requests": len(moe_trace),
+        "moe_expert_tokens": moe_expert_tokens,
         "generated_tokens": fleet_generated
-        + sum(e.scheduler.stats.generated_tokens for e in disagg.engines),
+        + sum(e.scheduler.stats.generated_tokens for e in disagg.engines)
+        + sum(
+            e.scheduler.stats.generated_tokens
+            for e in moe_cluster.engines
+        ),
         "invariant_checks": probe.checks,
         "trace_records": (
-            len(fleet_records) + len(disagg_records) if trace_out else 0
+            len(fleet_records) + len(disagg_records) + len(moe_records)
+            if trace_out else 0
         ),
         "ttft_p95_s": round(slo.ttft_p95, 3),
         "tpot_p95_s": round(slo.tpot_p95, 3),
@@ -373,6 +438,8 @@ def check(rows: list[dict]) -> list[str]:
             errs.append("the invariant probe never ran")
         if r["followups"] and r["gen_reuse_hits"] == 0:
             errs.append("no generated-token prefix reuse observed")
+        if r.get("moe_requests") and r.get("moe_expert_tokens", 0) == 0:
+            errs.append("moe burst recorded no expert-routed tokens")
     return errs
 
 

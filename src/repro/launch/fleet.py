@@ -60,7 +60,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="per-engine radix prefix caches over the KV pools "
-                         "(--no-prefix-cache disables; moe never caches)")
+                         "(--no-prefix-cache disables)")
     ap.add_argument("--split", default="",
                     help="disagg role split 'P,D'; empty = GALS-ratio "
                          "provisioning from measured rates")
@@ -141,8 +141,8 @@ def main(argv=None) -> int:
     # every paged family disaggregates: hybrid handoffs carry the SSM
     # lane-state snapshot next to the KV-block rows
     if args.prefix_cache and cfg.family not in PREFIX_CACHE_FAMILIES:
-        print(f"[fleet] note: family {cfg.family!r} cannot prefix-cache "
-              "(moe capacity routing is cross-token); serving uncached")
+        print(f"[fleet] note: family {cfg.family!r} cannot prefix-cache; "
+              "serving uncached")
     if args.quant:
         cfg = dataclasses.replace(cfg, w_bits=args.quant)
         full_cfg = dataclasses.replace(full_cfg, w_bits=args.quant)

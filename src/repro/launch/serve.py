@@ -55,7 +55,7 @@ def build_residency_plan(cfg, args):
 
     if not supports_budgeted_decode(cfg):
         raise ValueError(
-            f"--vmem-budget needs a dense-FFN attention family; "
+            f"--vmem-budget needs a streamable-FFN attention family; "
             f"{cfg.name} is {cfg.family!r}"
         )
     traffic = TrafficProfile(
@@ -274,7 +274,7 @@ def build_parser() -> argparse.ArgumentParser:
                     help="radix prefix cache over the KV pool: requests "
                          "adopt their longest cached prefix's blocks and "
                          "prefill only the unmatched suffix "
-                         "(--no-prefix-cache disables; moe never caches)")
+                         "(--no-prefix-cache disables)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature; 0 = greedy")
     ap.add_argument("--top-k", type=int, default=0,

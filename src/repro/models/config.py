@@ -34,21 +34,24 @@ ATTN_KV_FAMILIES = ("dense", "vlm", "moe")
 PAGED_FAMILIES = ATTN_KV_FAMILIES + ("hybrid",)
 
 # Families whose prompts can prefill in budget-sized chunks across rounds.
-# MoE is excluded (cross-token capacity routing: padded/absent positions
-# change real tokens' expert assignment). Hybrid chunks statefully: the
+# MoE qualifies because serving routes through the dropless per-token
+# dispatch (moe_ffn_dropless): a chunk boundary is invisible to routing,
+# so chunked == single-shot exactly (the train-path capacity dispatch
+# would not chunk — it is cross-token). Hybrid chunks statefully: the
 # scheduler carries the SSD/conv state between chunks through the same
 # carried-state kernels that power warm suffix prefill
 # (lm.prefill_suffix_paged_hybrid), so chunk boundaries are exact resume
 # points rather than approximations.
-CHUNKABLE_FAMILIES = ("dense", "vlm", "hybrid")
+CHUNKABLE_FAMILIES = ("dense", "vlm", "moe", "hybrid")
 
 # Families whose prompt KV can be served out of the radix prefix cache
 # (runtime.prefix_cache): a new request adopts the shared blocks of its
-# longest committed prefix and prefills only the unmatched suffix. MoE is
-# excluded — capacity routing is cross-token, so a suffix-only prefill
-# would perturb real tokens' outputs. Hybrid qualifies because the cache
-# stores an SSM-state anchor next to the shared-attention KV blocks.
-PREFIX_CACHE_FAMILIES = ("dense", "vlm", "hybrid")
+# longest committed prefix and prefills only the unmatched suffix. MoE
+# qualifies under dropless serving routing — a bare-suffix prefill routes
+# each suffix token independently, so it reproduces the cold full-prompt
+# prefill exactly. Hybrid qualifies because the cache stores an SSM-state
+# anchor next to the shared-attention KV blocks.
+PREFIX_CACHE_FAMILIES = ("dense", "vlm", "moe", "hybrid")
 
 # Families whose dense FFN stores 1/2-bit weights as packed uint8 carriers
 # when w_bits is set (lm._init_ffn packs every non-expert FFN; MoE expert

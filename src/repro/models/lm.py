@@ -351,9 +351,21 @@ def _attn_block(lp, cfg: ModelConfig, x, positions, *, causal=True, window=0):
     return x + dense(o.reshape(b, s, -1), lp["wo"]), (k, v)
 
 
-def _ffn_block(lp, cfg: ModelConfig, x, ln_name="ln2"):
+def _ffn_block(lp, cfg: ModelConfig, x, ln_name="ln2", *, dropless=False,
+               expert_mask=None, stream_depth=2):
+    """Pre-norm FFN residual. ``dropless`` switches the moe family onto
+    the per-token serving dispatch (``moe_ffn_dropless``), whose second
+    return is the (E,) expert-load tally instead of the train-path aux
+    loss; ``expert_mask`` ((E,) bool) marks experts whose weights stream
+    HBM->VMEM under a residency budget."""
     h = rms_norm(x, lp[ln_name], cfg.norm_eps)
     if cfg.family == "moe":
+        if dropless:
+            y, counts = moe_lib.moe_ffn_dropless(
+                h, lp["router"], lp["w1"], lp["w3"], lp["w2"], cfg,
+                stream_mask=expert_mask, stream_depth=stream_depth,
+            )
+            return x + y, counts
         y, aux = moe_lib.moe_ffn(
             h, lp["router"], lp["w1"], lp["w3"], lp["w2"], cfg
         )
@@ -765,14 +777,17 @@ def prefill_with_cache(
 
     tokens: (B, S) right-padded prompts; ``last_idx`` the index of the last
     real token. Causality makes the padded tail inert for positions
-    <= last_idx in the dense/vlm families ONLY — MoE capacity routing is
-    cross-token, so moe callers must pass unpadded prompts (the scheduler
-    does). Returns (next-token logits (B, 1, V), ks, vs) with
+    <= last_idx in every attention-KV family — dense/vlm trivially, and
+    moe because serving routes through the dropless per-token dispatch
+    (``moe_ffn_dropless``: a padded row's routing never touches a real
+    row's output). Returns (next-token logits (B, 1, V), ks, vs) with
     ks/vs stacked (L, B, S, n_kv, hd) — already RoPE'd, i.e. exactly the
-    rows the decode cache stores. Attention-KV families only.
+    rows the decode cache stores; the moe family appends a per-layer
+    expert-load tally (L, E). Attention-KV families only.
     """
     if cfg.family not in ATTN_KV_FAMILIES:
         raise ValueError(f"prefill_with_cache: unsupported family {cfg.family}")
+    moe = cfg.family == "moe"
     x = embed(tokens, params["embed"], _dt(cfg))
     s = x.shape[1]
     positions = jnp.arange(s)[None, :]
@@ -782,16 +797,24 @@ def prefill_with_cache(
         x, (k, v) = _attn_block(
             lp, cfg, x, positions, causal=True, window=cfg.sliding_window
         )
+        if moe:
+            x, counts = _ffn_block(lp, cfg, x, dropless=True)
+            return (x, aux), (k, v, counts)
         x, a = _ffn_block(lp, cfg, x)
         return (x, aux + a), (k, v)
 
-    (x, _), (ks, vs) = jax.lax.scan(
+    (x, _), outs = jax.lax.scan(
         layer_fn, (x, jnp.zeros((), jnp.float32)), params["layers"]
     )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    return unembed_logits(x_last, table, cfg.vocab), ks, vs
+    lg = unembed_logits(x_last, table, cfg.vocab)
+    if moe:
+        ks, vs, counts = outs
+        return lg, ks, vs, counts
+    ks, vs = outs
+    return lg, ks, vs
 
 
 def decode_step_paged(
@@ -816,18 +839,22 @@ def decode_step_paged(
     its gathered rows with per-lane positions (no lockstep shared length —
     lanes at different depths coexist in one batched step).
 
-    ``stream_mask`` (L,) bool turns on the budgeted weight-residency path
-    (``runtime.residency``): layers flagged True run their FFN through the
-    HBM->VMEM weight streamer with ring depth ``stream_depth`` instead of
-    the resident in-VMEM matmul — the mask is scanned with the layer
-    leaves so the model still compiles as one scan.
+    ``stream_mask`` turns on the budgeted weight-residency path
+    (``runtime.residency``). For the dense-FFN families it is (L,) bool:
+    layers flagged True run their FFN through the HBM->VMEM weight
+    streamer with ring depth ``stream_depth`` instead of the resident
+    in-VMEM matmul. For moe it is (L, E) bool: per-(layer, expert) cold
+    flags consumed by the dropless dispatch, which streams the flagged
+    experts' w1/w3/w2 and keeps the pinned (hot) experts resident.
+    Either way the mask is scanned with the layer leaves so the model
+    still compiles as one scan.
 
-    Returns (logits (B, 1, V), new pool_k, new pool_v).
+    Returns (logits (B, 1, V), new pool_k, new pool_v); the moe family
+    appends a per-layer expert-load tally (L, E).
     """
     if cfg.family not in ATTN_KV_FAMILIES:
         raise ValueError(f"decode_step_paged: unsupported family {cfg.family}")
-    if stream_mask is not None and cfg.family == "moe":
-        raise ValueError("budgeted decode does not cover moe expert FFNs")
+    moe = cfg.family == "moe"
     x = embed(token, params["embed"], _dt(cfg))
     b = x.shape[0]
     s_max = row_table.shape[1]
@@ -840,6 +867,7 @@ def decode_step_paged(
         x, aux = carry
         if stream_mask is None:
             lp, pk, pv = lp_kv  # pk/pv: (R, n_kv, hd) one layer's pool
+            streamed = None
         else:
             lp, pk, pv, streamed = lp_kv
         q, k, v = _decode_qkv(lp, cfg, x, pos_b)
@@ -850,6 +878,12 @@ def decode_step_paged(
             window=cfg.sliding_window,
         )
         x = x + dense(o.reshape(b, 1, -1), lp["wo"])
+        if moe:
+            x, counts = _ffn_block(
+                lp, cfg, x, dropless=True, expert_mask=streamed,
+                stream_depth=stream_depth,
+            )
+            return (x, aux), (pk, pv, counts)
         if stream_mask is None:
             x, a = _ffn_block(lp, cfg, x)
         else:
@@ -864,12 +898,17 @@ def decode_step_paged(
     xs = (params["layers"], pool_k, pool_v)
     if stream_mask is not None:
         xs = xs + (stream_mask,)
-    (x, _), (pks, pvs) = jax.lax.scan(
+    (x, _), outs = jax.lax.scan(
         layer_fn, (x, jnp.zeros((), jnp.float32)), xs
     )
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    return unembed_logits(x, table, cfg.vocab), pks, pvs
+    lg = unembed_logits(x, table, cfg.vocab)
+    if moe:
+        pks, pvs, counts = outs
+        return lg, pks, pvs, counts
+    pks, pvs = outs
+    return lg, pks, pvs
 
 
 def prefill_chunk_paged(
@@ -900,16 +939,17 @@ def prefill_chunk_paged(
     (B, S_max) the request's full row table; start: () position of the
     chunk's first token; last_idx: () in-chunk index of the prompt's last
     token (only meaningful on the final chunk). Attention-KV families
-    only, and MoE is excluded: its capacity routing is cross-token, so
-    chunking would perturb real tokens' outputs (the scheduler keeps MoE
-    prompts single-shot).
+    only — moe included: the dropless per-token dispatch makes a chunk
+    boundary invisible to routing, so chunked == single-shot exactly.
 
-    Returns (logits at last_idx (B, 1, V), new pool_k, new pool_v).
+    Returns (logits at last_idx (B, 1, V), new pool_k, new pool_v); the
+    moe family appends a per-layer expert-load tally (L, E).
     """
-    if cfg.family not in ATTN_KV_FAMILIES or cfg.family == "moe":
+    if cfg.family not in ATTN_KV_FAMILIES:
         raise ValueError(
             f"prefill_chunk_paged: unsupported family {cfg.family}"
         )
+    moe = cfg.family == "moe"
     x = embed(tokens, params["embed"], _dt(cfg))
     b, c, _ = x.shape
     positions = start + jnp.arange(c)[None, :]  # (1, C) broadcast over B
@@ -927,10 +967,13 @@ def prefill_chunk_paged(
             window=cfg.sliding_window,
         )
         x = x + dense(o.reshape(b, c, -1), lp["wo"])
+        if moe:
+            x, counts = _ffn_block(lp, cfg, x, dropless=True)
+            return (x, aux), (pk, pv, counts)
         x, a = _ffn_block(lp, cfg, x)
         return (x, aux + a), (pk, pv)
 
-    (x, _), (pks, pvs) = jax.lax.scan(
+    (x, _), outs = jax.lax.scan(
         layer_fn,
         (x, jnp.zeros((), jnp.float32)),
         (params["layers"], pool_k, pool_v),
@@ -938,7 +981,12 @@ def prefill_chunk_paged(
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    return unembed_logits(x_last, table, cfg.vocab), pks, pvs
+    lg = unembed_logits(x_last, table, cfg.vocab)
+    if moe:
+        pks, pvs, counts = outs
+        return lg, pks, pvs, counts
+    pks, pvs = outs
+    return lg, pks, pvs
 
 
 # --------------------------------------------------------------------------

@@ -1,12 +1,22 @@
-"""Mixture-of-Experts FFN with capacity-based batched dispatch.
+"""Mixture-of-Experts FFN: capacity dispatch for training, dropless for
+serving.
 
 Expert-parallel design (DESIGN.md §5): expert weights are stacked on a
-leading E axis and sharded over the 'model' mesh axis. Dispatch is *batched
-over experts* — each expert top-k-selects its C highest-gate tokens
-(capacity C = tokens * top_k * capacity_factor / E), gathers them, runs the
-FFN as one batched einsum over (E, C, d), and scatter-adds the combined
-outputs. Everything is static-shaped (tokens beyond capacity drop, standard
-GShard-style), so it lowers cleanly under GSPMD at 512 devices.
+leading E axis and sharded over the 'model' mesh axis. The *training*
+dispatch is batched over experts — each expert top-k-selects its C
+highest-gate tokens (capacity C = tokens * top_k * capacity_factor / E),
+gathers them, runs the FFN as one batched einsum over (E, C, d), and
+scatter-adds the combined outputs. Everything is static-shaped (tokens
+beyond capacity drop, standard GShard-style), so it lowers cleanly under
+GSPMD at 512 devices.
+
+*Serving* routes through ``moe_ffn_dropless`` instead: capacity
+selection is a cross-token top-k, so a token's output depends on what
+else shares its dispatch group — which breaks chunked prefill, prefix
+caching, and padded batching. The dropless path gives every token its
+full top-k mix with no competition, restoring per-token determinism,
+and takes a per-expert stream mask so cold expert FFNs can pull their
+weights HBM→VMEM under a residency budget.
 
 This is the architecture family where the paper's insight bites hardest:
 64 small (d_ff 1024/1408) expert FFNs are exactly the "many oddly-shaped
@@ -43,14 +53,123 @@ def _ep_shard_bec(t):
 
 
 def moe_capacity(cfg: ModelConfig, group_tokens: int) -> int:
-    """Per-group expert capacity (groups = batch rows, GShard-style)."""
+    """Per-group expert capacity (groups = batch rows, GShard-style).
+
+    The raw capacity ``S * k * cf / E`` is rounded up to the 8-sublane
+    boundary only *above* 8 (tiny groups keep their exact capacity
+    instead of degenerating to the rounding grain), then clamped to the
+    group size — the round-up may otherwise exceed ``group_tokens`` and
+    gather out-of-range rows. Train-path only; serving routes dropless.
+    """
     cap = int(
         group_tokens
         * cfg.experts_per_token
         * cfg.capacity_factor
         / cfg.n_experts
     )
-    return min(group_tokens, max(1, (cap + 7) // 8 * 8 if cap >= 8 else cap or 1))
+    cap = max(1, cap)
+    if cap >= 8:
+        cap = (cap + 7) // 8 * 8
+    return min(group_tokens, cap)
+
+
+def _token_gates(x, router, cfg: ModelConfig):
+    """Per-token top-k routing shared by both dispatch paths.
+
+    Returns (gate (B, S, E) dense mix weights — zero off the top-k —
+    probs (B, S, E), onehot (B, S, k, E)). Depends on each token's own
+    hidden state only, never on the rest of the batch.
+    """
+    e, k = cfg.n_experts, cfg.experts_per_token
+    gate_logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32), router
+    )
+    probs = jax.nn.softmax(gate_logits, axis=-1)  # (B, S, E)
+    top_g, top_i = jax.lax.top_k(probs, k)  # (B, S, k)
+    top_g = top_g / jnp.maximum(jnp.sum(top_g, axis=-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)  # (B, S, k, E)
+    gate = jnp.einsum("bske,bsk->bse", onehot, top_g)
+    return gate, probs, onehot
+
+
+def moe_ffn_dropless(
+    x: jnp.ndarray,
+    router: jnp.ndarray,
+    w1: jnp.ndarray,
+    w3: jnp.ndarray,
+    w2: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    stream_mask: jnp.ndarray | None = None,
+    stream_depth: int = 2,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dropless per-token dispatch: every token keeps its full top-k mix.
+
+    No cross-token capacity competition — each token's output is a pure
+    function of its own hidden state and the expert weights, so chunked
+    prefill, bare-suffix prefill, and padded batching are exact (the
+    serving entry points route here; training keeps ``moe_ffn``'s
+    batched-capacity einsum). Experts are visited by a ``lax.scan`` —
+    one (B*S, d) matmul trio per expert, weighted by the dense gate —
+    which keeps the budgeted and unbudgeted paths on the *same*
+    accumulation order, so expert streaming is bit-identical.
+
+    ``stream_mask`` (E,) bool marks cold experts whose w1/w3/w2 stream
+    HBM→VMEM through ``kernels.ops.stream_matmul`` (the manual-DMA ring;
+    jnp reference on CPU, bit-identical to the resident path). None
+    keeps every expert resident.
+
+    Returns (output (B, S, d), per-expert routed-token counts (E,) f32
+    — the expert-load gauge; padded rows route too and are counted).
+    """
+    from repro.kernels import ops
+
+    b, s, d = x.shape
+    e = cfg.n_experts
+    ff = w1.shape[-1]
+    gate, _, onehot = _token_gates(x, router, cfg)
+    counts = jnp.sum(onehot, axis=(0, 1, 2))  # (E,)
+
+    x2 = x.astype(jnp.float32)
+    mask = (
+        jnp.zeros((e,), bool)
+        if stream_mask is None
+        else jnp.asarray(stream_mask, bool)
+    )
+
+    def _resident(args):
+        xr, w1e, w3e, w2e = args
+        h = jax.nn.silu(xr @ w1e) * (xr @ w3e)
+        return h @ w2e
+
+    def _streamed(args):
+        xr, w1e, w3e, w2e = args
+        h = jax.nn.silu(
+            ops.stream_matmul(
+                xr, w1e, bits=0, k=d, stream_depth=stream_depth
+            )
+        ) * ops.stream_matmul(
+            xr, w3e, bits=0, k=d, stream_depth=stream_depth
+        )
+        return ops.stream_matmul(
+            h, w2e, bits=0, k=ff, stream_depth=stream_depth
+        )
+
+    def _one_expert(acc, leaf):
+        w1e, w3e, w2e, ge, cold = leaf
+        ye = jax.lax.cond(
+            cold, _streamed, _resident,
+            (x2.reshape(b * s, d), w1e.astype(jnp.float32),
+             w3e.astype(jnp.float32), w2e.astype(jnp.float32)),
+        )
+        return acc + ge.reshape(b * s)[:, None] * ye, None
+
+    acc, _ = jax.lax.scan(
+        _one_expert,
+        jnp.zeros((b * s, d), jnp.float32),
+        (w1, w3, w2, gate.transpose(2, 0, 1), mask),
+    )
+    return acc.reshape(b, s, d).astype(x.dtype), counts
 
 
 def moe_ffn(
@@ -71,18 +190,10 @@ def moe_ffn(
     Returns (output (B, S, d), aux load-balance loss scalar).
     """
     b, s, d = x.shape
-    e, k = cfg.n_experts, cfg.experts_per_token
-
-    gate_logits = jnp.einsum(
-        "bsd,de->bse", x.astype(jnp.float32), router
-    )
-    probs = jax.nn.softmax(gate_logits, axis=-1)  # (B, S, E)
-    top_g, top_i = jax.lax.top_k(probs, k)  # (B, S, k)
-    top_g = top_g / jnp.maximum(jnp.sum(top_g, axis=-1, keepdims=True), 1e-9)
+    e = cfg.n_experts
 
     # dense (B, S, E) gate matrix: zero where the expert is not in top-k
-    onehot = jax.nn.one_hot(top_i, e, dtype=jnp.float32)  # (B, S, k, E)
-    gate = jnp.einsum("bske,bsk->bse", onehot, top_g)
+    gate, probs, onehot = _token_gates(x, router, cfg)
 
     # load-balance aux loss (Switch): E * sum_e f_e * p_e
     frac_tokens = jnp.mean(onehot.sum(axis=2), axis=(0, 1))  # (E,)

@@ -20,7 +20,11 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.config import PACKING_FAMILIES, ModelConfig
+from repro.models.config import (
+    CHUNKABLE_FAMILIES,
+    PACKING_FAMILIES,
+    ModelConfig,
+)
 from repro.models.lm import SamplingParams
 from repro.perf.roofline import HW, HwModel
 from repro.runtime.kv_pool import KVPool
@@ -195,7 +199,15 @@ class Engine:
         usable = sched.pool.usable_blocks * sched.pool.block_tokens
         if total_tokens > min(usable, sched.max_len):
             return False
-        return self.load_tokens + total_tokens <= sched.token_budget
+        if self.load_tokens + total_tokens <= sched.token_budget:
+            return True
+        # fleet-level chunked admission: an over-budget prompt lands on
+        # an *idle* engine of a chunkable family — the scheduler admits
+        # it solo (mirroring its committed_tokens == 0 rule) and its
+        # chunk cursor amortizes the prefill across rounds
+        return (
+            self.cfg.family in CHUNKABLE_FAMILIES and self.load_tokens == 0
+        )
 
     def prefix_match_tokens(self, prompt) -> int:
         """Longest cached-prefix match for a prompt on this engine (0
@@ -343,5 +355,6 @@ class Engine:
             "cached_blocks": self.scheduler.pool.cached_blocks,
             "decode_steps": s.decode_steps,
             "generated_tokens": s.generated_tokens,
+            "expert_tokens": s.expert_tokens,
             "pool_utilization": round(s.steady_state_utilization, 4),
         }

@@ -44,7 +44,7 @@ import dataclasses
 import math
 from collections import deque
 
-from repro.models.config import ModelConfig
+from repro.models.config import CHUNKABLE_FAMILIES, ModelConfig
 from repro.models.lm import SamplingParams
 from repro.runtime.cluster.engine import Engine, StepCostModel
 from repro.runtime.cluster.traffic import (
@@ -75,15 +75,25 @@ class Router:
         self.assignments: dict[int, list[int]] = {}
 
     def _fits_somewhere(self, creq: ClientRequest) -> bool:
-        return any(
-            not e.drained
-            and creq.total_tokens
-            <= min(
+        """Whether some undrained engine could *ever* hold this request.
+
+        Chunkable-family engines are not bounded by their admission token
+        budget: the scheduler admits an over-budget prompt solo and
+        streams it through budget-sized prefill chunks, so only the pool
+        capacity and ``max_len`` are hard walls (fleet-level chunked
+        admission)."""
+        def ceiling(e: Engine) -> int:
+            cap = min(
                 e.scheduler.max_len,
                 e.scheduler.pool.usable_blocks
                 * e.scheduler.pool.block_tokens,
-                e.scheduler.token_budget,
             )
+            if e.cfg.family not in CHUNKABLE_FAMILIES:
+                cap = min(cap, e.scheduler.token_budget)
+            return cap
+
+        return any(
+            not e.drained and creq.total_tokens <= ceiling(e)
             for e in self.engines
         )
 

@@ -25,8 +25,10 @@ from repro.runtime.residency.plan import RuntimeResidencyPlan
 
 
 def supports_budgeted_decode(cfg: ModelConfig) -> bool:
-    """Budgeted decode = paged decode + a streamable dense FFN."""
-    return cfg.family in ("dense", "vlm")
+    """Budgeted decode = paged decode + a streamable FFN weight set:
+    the dense-FFN attention families (per-layer stream mask) and moe
+    (per-(layer, expert) mask over the dropless dispatch)."""
+    return cfg.family in ("dense", "vlm", "moe")
 
 
 def make_budgeted_paged_serve_step(
@@ -35,16 +37,26 @@ def make_budgeted_paged_serve_step(
     """Pool-indexed serve step running against the plan's budgeted set.
 
     Same signature as ``steps.make_paged_serve_step``: (params, token,
-    pool_k, pool_v, row_table, lengths) -> (logits, pool_k, pool_v).
+    pool_k, pool_v, row_table, lengths) -> (logits, pool_k, pool_v)
+    (+ a per-layer expert-load tally for moe). The mask granularity
+    follows the family: (L,) layers for dense/vlm, (L, E) experts for
+    moe — cold experts stream their w1/w3/w2 through the DMA ring while
+    the knapsack-pinned hot experts stay resident.
     """
     if not supports_budgeted_decode(cfg):
         raise ValueError(
-            f"budgeted decode needs a dense-FFN attention family; "
-            f"got {cfg.family!r} (moe expert streaming and ssm/hybrid "
-            "state are out of the residency executor's scope)"
+            f"budgeted decode needs a streamable-FFN attention family; "
+            f"got {cfg.family!r} (ssm/hybrid state is out of the "
+            "residency executor's scope)"
         )
-    mask = plan.layer_stream_mask(cfg)
-    assert len(mask) == cfg.n_layers, (len(mask), cfg.n_layers)
+    if cfg.family == "moe":
+        mask = plan.expert_stream_mask(cfg)
+        assert len(mask) == cfg.n_layers and all(
+            len(row) == cfg.n_experts for row in mask
+        ), (len(mask), cfg.n_layers, cfg.n_experts)
+    else:
+        mask = plan.layer_stream_mask(cfg)
+        assert len(mask) == cfg.n_layers, (len(mask), cfg.n_layers)
     from repro.runtime.steps import make_budgeted_paged_serve_step as _mk
 
     return _mk(cfg, mask, plan.stream_ahead)

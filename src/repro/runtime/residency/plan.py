@@ -236,6 +236,26 @@ class RuntimeResidencyPlan:
             mask.append(not (mine and all(mine)))
         return tuple(mask)
 
+    def expert_stream_mask(
+        self, cfg: ModelConfig
+    ) -> tuple[tuple[bool, ...], ...]:
+        """Per-(layer, expert) 'FFN is streamed' flags for the moe
+        executor: an expert runs resident only if *all three* of its mats
+        are pinned (the knapsack pins whole ``L{l}.e{e}`` regions, so this
+        is all-or-nothing per expert — the expert-granular analogue of
+        ``layer_stream_mask``). Shape (n_layers, n_experts), scanned with
+        the stacked layer leaves so each layer sees its (E,) row."""
+        res = self.block_resident()
+        mask = []
+        for l in range(cfg.n_layers):
+            row = []
+            for e in range(cfg.n_experts):
+                prefix = f"L{l:03d}.e{e}."
+                mine = [r for n, r in res.items() if n.startswith(prefix)]
+                row.append(not (mine and all(mine)))
+            mask.append(tuple(row))
+        return tuple(mask)
+
     def summary(self) -> dict:
         return {
             "model": self.model,

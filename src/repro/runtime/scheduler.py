@@ -162,6 +162,7 @@ class SchedulerStats:
     prefix_hit_tokens: int = 0  # prompt tokens served from cached blocks
     decode_steps: int = 0
     handoffs: int = 0
+    expert_tokens: int = 0  # moe: routed (token, expert) slots, all layers
     rounds: int = 0
     ttfts: list[float] = dataclasses.field(default_factory=list)
     util_samples: list[float] = dataclasses.field(default_factory=list)
@@ -243,8 +244,7 @@ class Scheduler:
             if cfg.family not in PREFIX_CACHE_FAMILIES:
                 raise ValueError(
                     f"prefix caching covers {PREFIX_CACHE_FAMILIES}; "
-                    f"family {cfg.family!r} cannot prefill a bare suffix "
-                    "(moe capacity routing is cross-token)"
+                    f"family {cfg.family!r} cannot prefill a bare suffix"
                 )
             if prefix_cache.pool is not pool:
                 raise ValueError("prefix cache must index this pool")
@@ -289,6 +289,21 @@ class Scheduler:
         self._table_dirty = False
         self._next_rid = 0
         self.stats = SchedulerStats()
+        # moe expert-load observability: cumulative per-(layer, expert)
+        # routed-token tally fed by every serve step's counts output;
+        # ``_emit_round`` derives the load-entropy / hot-expert gauges
+        # from it. ``_expert_resident`` is the residency plan's pinned
+        # (L, E) set — with no plan every expert is resident.
+        self._expert_counts = (
+            np.zeros((cfg.n_layers, cfg.n_experts), np.float64)
+            if cfg.family == "moe"
+            else None
+        )
+        self._expert_resident = None
+        if cfg.family == "moe" and residency is not None:
+            self._expert_resident = ~np.asarray(
+                residency.expert_stream_mask(cfg), bool
+            )
         # unified observability (runtime.tracker): one record per round,
         # emitted either straight to ``tracker`` or through ``on_round``
         # (a fleet Engine installs the hook so the record also carries
@@ -344,9 +359,8 @@ class Scheduler:
         # prompts over the admission token budget are legal for chunkable
         # families: they admit solo and prefill in budget-sized chunks
         # across rounds (hybrid carries the SSD/conv state between
-        # chunks). MoE prompts must prefill in one unpadded shot —
-        # capacity routing is cross-token — so there the budget stays a
-        # hard cap.
+        # chunks; moe routes dropless, so a chunk boundary is invisible
+        # to the expert dispatch).
         if (
             total > self.token_budget
             and self.cfg.family not in CHUNKABLE_FAMILIES
@@ -354,7 +368,7 @@ class Scheduler:
             raise ValueError(
                 f"request needs {total} tokens > token budget "
                 f"{self.token_budget} ({self.cfg.family} prompts cannot "
-                "chunk: capacity routing is cross-token)"
+                "chunk)"
             )
         if rid is None:
             rid = self._next_rid
@@ -437,6 +451,16 @@ class Scheduler:
             np.random.SeedSequence([sp.seed, req.rid, len(req.output)])
         )
         return sample_logits(row, sp, rng)
+
+    def _note_expert_counts(self, counts) -> None:
+        """Fold one serve step's (L, E) routed-token tally into the run
+        totals. Padded prompt rows and idle decode lanes route too (the
+        dropless dispatch is per-token, so their routing is inert for
+        outputs but still visible here) — the gauges are a load signal,
+        not an exact busy-token count."""
+        c = np.asarray(counts, np.float64)
+        self._expert_counts += c
+        self.stats.expert_tokens += int(c.sum())
 
     # ---------------- admission / prefill ----------------
 
@@ -631,11 +655,11 @@ class Scheduler:
             self._prefill_one_chunk(slot)
             return True
 
-        if self.cfg.family in ("moe", "hybrid"):
-            # MoE capacity routing is cross-token (padded positions compete
-            # for per-expert capacity) and the hybrid SSD state integrates
-            # every position (a padded tail would pollute the handed-over
-            # state), so these prefill unpadded — one trace per length
+        if self.cfg.family == "hybrid":
+            # the hybrid SSD state integrates every position (a padded
+            # tail would pollute the handed-over state), so hybrid
+            # prefills unpadded — one trace per length. MoE buckets like
+            # dense: dropless routing makes padded rows inert.
             bucket = p
         else:
             bucket = max(
@@ -654,6 +678,11 @@ class Scheduler:
                 self._lane_state,
                 lane,
             )
+        elif self.cfg.family == "moe":
+            logits, ks, vs, counts = self._prefill(
+                self.params, jnp.asarray(padded), p - 1
+            )
+            self._note_expert_counts(counts)
         else:
             logits, ks, vs = self._prefill(
                 self.params, jnp.asarray(padded), p - 1
@@ -706,7 +735,7 @@ class Scheduler:
             write_rows[0, :n] = rows
             tokens = np.zeros((1, c), np.int32)
             tokens[0, :n] = req.prompt[c0 : c0 + n]
-            logits, self.pool.k, self.pool.v = self._chunk_prefill(
+            out = self._chunk_prefill(
                 self.params,
                 jnp.asarray(tokens),
                 self.pool.k,
@@ -716,6 +745,11 @@ class Scheduler:
                 jnp.asarray(c0, jnp.int32),
                 jnp.asarray(n - 1, jnp.int32),
             )
+            if self.cfg.family == "moe":
+                logits, self.pool.k, self.pool.v, counts = out
+                self._note_expert_counts(counts)
+            else:
+                logits, self.pool.k, self.pool.v = out
         self.stats.prefill_steps += 1
         self.stats.prefill_tokens += n
         self._chunk_cursor[rid] = c0 + n
@@ -797,6 +831,16 @@ class Scheduler:
                 jnp.asarray(self._lengths),
                 self._lane_state,
             )
+        elif self.cfg.family == "moe":
+            logits, self.pool.k, self.pool.v, counts = self._decode(
+                self.params,
+                jnp.asarray(self._token),
+                self.pool.k,
+                self.pool.v,
+                self._row_table_dev,
+                jnp.asarray(self._lengths),
+            )
+            self._note_expert_counts(counts)
         else:
             logits, self.pool.k, self.pool.v = self._decode(
                 self.params,
@@ -858,6 +902,7 @@ class Scheduler:
         "handoffs",
         "prefix_hits",
         "prefix_hit_tokens",
+        "expert_tokens",
     )
 
     def _emit_round(self) -> None:
@@ -902,6 +947,26 @@ class Scheduler:
                 cache_anchors=c["anchors"],
                 cache_evicted_blocks=c["evicted_blocks"],
             )
+        if self._expert_counts is not None:
+            tot = float(self._expert_counts.sum())
+            if tot > 0:
+                # gauges over the cumulative (L, E) tally: normalized
+                # load entropy (1.0 = perfectly balanced) and the
+                # fraction of routed tokens that hit a resident expert
+                # (1.0 with no residency plan — everything is pinned)
+                pe = self._expert_counts.sum(axis=0) / tot
+                ent = float(-(pe * np.log(np.maximum(pe, 1e-12))).sum())
+                rec["moe_expert_entropy"] = round(
+                    ent / math.log(max(2, self.cfg.n_experts)), 4
+                )
+                hot = (
+                    self._expert_resident
+                    if self._expert_resident is not None
+                    else np.ones(self._expert_counts.shape, bool)
+                )
+                rec["moe_hot_expert_fraction"] = round(
+                    float(self._expert_counts[hot].sum()) / tot, 4
+                )
         if self.on_round is not None:
             self.on_round(rec)
         else:

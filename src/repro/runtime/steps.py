@@ -108,7 +108,8 @@ def make_paged_serve_step(cfg: ModelConfig) -> Callable:
     -> (logits (B,1,V), new pool_k, new pool_v). Each decode lane gathers
     its KV rows from the shared physical pool through ``row_table`` and
     scatters the new token's row back — the gather/scatter analog of the
-    paper's round-robin port schedule over a packed BRAM. Jit with
+    paper's round-robin port schedule over a packed BRAM. The moe family
+    appends a per-layer expert-load tally (L, E) to the return. Jit with
     ``donate_argnums=(2, 3)`` so the pool updates in place.
     """
 
@@ -141,7 +142,8 @@ def make_pool_prefill_step(cfg: ModelConfig) -> Callable:
     ks, vs stacked (L, B, S, n_kv, hd)). One call fills a request's whole
     prompt — time-to-first-token is one step, not S serve steps. The
     hybrid step additionally returns the per-lane SSM state dict
-    (``lm.prefill_with_cache_hybrid``).
+    (``lm.prefill_with_cache_hybrid``); the moe step appends a per-layer
+    expert-load tally (L, E).
     """
 
     if cfg.family == "hybrid":
@@ -201,10 +203,12 @@ def make_hybrid_suffix_prefill_step(cfg: ModelConfig) -> Callable:
 def make_budgeted_paged_serve_step(
     cfg: ModelConfig, stream_mask: tuple, stream_depth: int
 ) -> Callable:
-    """The paged serve step under a ``runtime.residency`` plan: layers
-    whose FFN the plan left in HBM stream their weights through the
+    """The paged serve step under a ``runtime.residency`` plan: weight
+    regions the plan left in HBM stream through the
     ``kernels.weight_stream`` ring (depth = the plan's R_F analogue);
-    resident layers run the standard in-VMEM path. Same signature as
+    resident regions run the standard in-VMEM path. ``stream_mask`` is
+    (L,) per-layer flags for the dense-FFN families, (L, E) per-expert
+    flags for moe (consumed by the dropless dispatch). Same signature as
     ``make_paged_serve_step``.
     """
     mask = jnp.asarray(stream_mask, bool)

@@ -30,7 +30,11 @@ Record schema (``kind="metrics"``, one per round):
     active                busy decode lanes                [gauge]
     committed_tokens      admitted token commitment        [gauge]
     prefill_steps/_tokens, decode_steps, generated_tokens,
-    completed, handoffs, prefix_hits, prefix_hit_tokens    [deltas]
+    completed, handoffs, prefix_hits, prefix_hit_tokens,
+    expert_tokens (moe routed token-expert slots)          [deltas]
+    moe_expert_entropy    normalized expert-load entropy   [gauge, moe]
+    moe_hot_expert_fraction  routed tokens hitting a
+                          residency-pinned expert          [gauge, moe]
     ttfts                 wall-clock TTFTs recorded this round
     pool_*                KVPool gauges (utilization, free/held/shared/
                           cached/evictable blocks) + cumulative
@@ -173,6 +177,7 @@ DELTA_KEYS = (
     "handoffs",
     "prefix_hits",
     "prefix_hit_tokens",
+    "expert_tokens",
 )
 
 
@@ -201,7 +206,13 @@ def replay_summary(records: list[dict], engine: int | None = None) -> dict:
     out["mean_ttft"] = sum(ttfts) / len(ttfts) if ttfts else 0.0
     if rows:
         last = rows[-1]
-        for k in ("clock_s", "pool_utilization", "pool_cached_blocks"):
+        for k in (
+            "clock_s",
+            "pool_utilization",
+            "pool_cached_blocks",
+            "moe_expert_entropy",
+            "moe_hot_expert_fraction",
+        ):
             if k in last:
                 out[k] = last[k]
     return out

@@ -276,6 +276,61 @@ def test_hybrid_disagg_token_identity():
     ) == spec.n_requests
 
 
+def test_moe_disagg_token_identity():
+    """Dropless moe disaggregates like dense: the KV blocks are the whole
+    handoff (expert choices are recomputed per token on the decode
+    engine from the same gates), so prefill-on-A / decode-on-B equals
+    single-engine serving token for token."""
+    mcfg = get_smoke_config("olmoe_1b_7b")
+    mparams = lm.init_params(mcfg, jax.random.key(0))
+    cost = StepCostModel.for_config(get_config("olmoe_1b_7b"), slots=SLOTS)
+    spec = _spec(mcfg, n_requests=6)
+    trace = synthesize(spec)
+    single = _cluster("fleet", mcfg, mparams, cost, spec, n_engines=1).run(
+        trace
+    )
+    disagg = _cluster("disagg", mcfg, mparams, cost, spec, n_engines=2).run(
+        trace
+    )
+    assert disagg.outputs == single.outputs
+    assert sum(
+        s["handoffs"] for s in disagg.engine_summaries
+    ) == spec.n_requests
+    # both sides of the split routed tokens through the dispatch
+    assert all(s["expert_tokens"] > 0 for s in disagg.engine_summaries)
+
+
+def test_router_chunked_admission_takes_over_budget_prompt():
+    """Fleet-level chunked admission (the Router analog of the
+    scheduler's solo admission): a prompt larger than every engine's
+    token budget is no longer bounced at offer() for chunkable families —
+    an idle engine accepts it and streams it through budget-sized
+    chunks, emitting the exact stream of an unbudgeted single engine."""
+    cfg = get_smoke_config("smollm_360m")
+    params = lm.init_params(cfg, jax.random.key(0))
+    cost = StepCostModel.for_config(get_config("smollm_360m"), slots=SLOTS)
+    rng = np.random.default_rng(41)
+    long_p = rng.integers(0, cfg.vocab, size=(20,)).astype(np.int32)
+    trace = [ClientRequest(0, 0.0, long_p, 4, 0)]
+
+    big = FleetCluster(
+        cfg, params, n_engines=1, slots=SLOTS, max_len=MAX_LEN,
+        block_tokens=BLOCK, cost=cost,
+    ).run(trace)
+    budgeted = FleetCluster(
+        cfg, params, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
+        block_tokens=BLOCK, cost=cost, token_budget=16,
+    )
+    assert all(
+        e.scheduler.token_budget < len(long_p) + 4
+        for e in budgeted.engines
+    )
+    res = budgeted.run(trace)
+    assert res.outputs == big.outputs
+    # the prompt really went through the chunked path, not one big step
+    assert sum(s["prefill_steps"] for s in res.engine_summaries) == 2
+
+
 def test_hybrid_handoff_payload_carries_lane_state(setup):
     """Scheduler-level: the hybrid PrefillHandoff must carry the SSM
     snapshot, and importing without one is an error, not silent drift."""

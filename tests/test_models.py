@@ -237,6 +237,31 @@ def test_moe_capacity_drops_gracefully():
     assert 0.5 < float(aux) < float(cfg.n_experts)
 
 
+def test_moe_capacity_boundaries():
+    """Rounding boundaries of the train-path capacity: tiny groups keep
+    their exact capacity (no degeneration to the 8-sublane grain), the
+    round-up kicks in only at cap >= 8, and — the clamp-after-round
+    regression — the rounded capacity never exceeds the group size (an
+    over-group capacity would gather out-of-range rows)."""
+    import dataclasses
+
+    from repro.models.moe import moe_capacity
+
+    cfg = get_smoke_config("olmoe_1b_7b")  # E=8, k=2, cf=1.25
+    assert moe_capacity(cfg, 1) == 1  # floor: at least one slot
+    assert moe_capacity(cfg, 4) == 1  # raw 1.25 -> exact, not grain 8
+    assert moe_capacity(cfg, 24) == 7  # raw 7.5: below 8 stays exact
+    assert moe_capacity(cfg, 26) == 8  # raw 8.125: first rounded value
+    assert moe_capacity(cfg, 32) == 16  # 10 -> next 8-sublane boundary
+    assert moe_capacity(cfg, 1024) == 320
+    # clamp-after-round: with cf=4, group 9 -> raw 9 -> rounds to 16,
+    # which must clamp back to the 9 gatherable rows
+    fat = dataclasses.replace(cfg, capacity_factor=4.0)
+    assert moe_capacity(fat, 9) == 9
+    for g in range(1, 64):
+        assert 1 <= moe_capacity(fat, g) <= g
+
+
 def test_packed_lm_close_to_dense_ffn():
     """w_bits=1 FFN: the packed path must equal explicit unpack-matmul."""
     import dataclasses

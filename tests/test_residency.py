@@ -232,15 +232,44 @@ def test_budgeted_serve_token_identical(w_bits):
     assert full == budgeted
 
 
-def test_budgeted_serve_rejects_moe():
-    moe = get_smoke_config("olmoe_1b_7b")
+def test_moe_budgeted_serve_token_identical():
+    """Expert streaming is the moe analog of the dense layer stream:
+    a half-budget plan pins some (layer, expert) regions and streams the
+    rest through the weight ring, and because the dropless dispatch scans
+    experts in the same order either way, the budgeted token stream is
+    identical to the unbudgeted one."""
+    cfg = get_smoke_config("olmoe_1b_7b")
+    params = lm.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(6)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=(P,)).astype(np.int32)
+        for _ in range(3)
+    ]
     plan = compile_residency_plan(
-        moe, vmem_budget_bytes=0, traffic=TrafficProfile(lanes=2)
+        cfg,
+        vmem_budget_bytes=_total_block_bytes(cfg) // 2,
+        traffic=TrafficProfile(lanes=SLOTS, prompt_len=P, gen_len=GEN),
+    )
+    mask = np.asarray(plan.expert_stream_mask(cfg), bool)
+    assert mask.shape == (cfg.n_layers, cfg.n_experts)
+    assert mask.any(), "plan must stream at least one expert"
+    assert not mask.all(), "half budget should pin at least one expert"
+    full = _serve_outputs(cfg, params, prompts, None)
+    budgeted = _serve_outputs(cfg, params, prompts, plan)
+    assert full == budgeted
+
+
+def test_budgeted_serve_still_rejects_stateful_families():
+    """The residency executor streams FFN weights; ssm/hybrid recurrent
+    state is out of its scope and must fail loudly, not silently."""
+    hyb = get_smoke_config("zamba2_2p7b")
+    plan = compile_residency_plan(
+        hyb, vmem_budget_bytes=0, traffic=TrafficProfile(lanes=2)
     )
     from repro.runtime.residency import make_budgeted_paged_serve_step
 
-    with pytest.raises(ValueError):
-        make_budgeted_paged_serve_step(moe, plan)
+    with pytest.raises(ValueError, match="streamable-FFN"):
+        make_budgeted_paged_serve_step(hyb, plan)
 
 
 # ---------------- launch.port (§V ordering) ----------------
