@@ -20,7 +20,15 @@ import json
 import sys
 
 
-def record_key(r: dict) -> tuple:
+def record_key(r: dict) -> tuple | None:
+    # tracker-stream records (hparams/metrics/span lines from a
+    # JsonlTracker trace) are an append-only log, not keyed cells:
+    # they merge by concatenation (None = never collide). Without this
+    # branch an hparams record ("arch" but no "shape") would crash the
+    # dry-run key, and every span record would collapse into one fleet
+    # key.
+    if "kind" in r:
+        return None
     if r.get("bench") == "prefix":  # a prefix-cache A/B row
         return (
             "prefix", r["arch"], r.get("quant", 0), r.get("mode"),
@@ -45,11 +53,15 @@ def record_key(r: dict) -> tuple:
 def merge(paths: list[str]) -> list[dict]:
     recs: dict[tuple, dict] = {}
     order: list[tuple] = []
+    n_stream = 0
     for p in paths:
         with open(p) as fh:
             for line in fh:
                 r = json.loads(line)
                 key = record_key(r)
+                if key is None:  # trace-stream record: unique, in order
+                    key = ("trace", n_stream)
+                    n_stream += 1
                 if key not in recs:
                     order.append(key)
                 recs[key] = r

@@ -219,6 +219,67 @@ def moe_table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def spans_table(recs: list[dict]) -> str:
+    """Critical-path attribution from a span stream (a JsonlTracker
+    trace with ``--trace-spans``): requests bucketed by submit-relative
+    TTFT percentile, each bucket naming the phase that dominates the
+    pre-first-token time — the table answers "what do the slow requests
+    wait on that the fast ones don't"."""
+    from repro.runtime.spans import request_events, request_spans
+
+    by_rid = request_spans(recs)
+    events = request_events(recs)
+    per = []  # (rid, ttft, {phase: pre-first seconds})
+    for rid, ev in sorted(events.items()):
+        spans = by_rid.get(rid)
+        if not spans or "first" not in ev:
+            continue
+        t0 = spans[0]["t0"]
+        shares: dict[str, float] = {}
+        for s in spans:
+            if s["t1"] <= ev["first"] + 1e-12:
+                shares[s["phase"]] = (
+                    shares.get(s["phase"], 0.0) + s["t1"] - s["t0"]
+                )
+        per.append((rid, ev["first"] - t0, shares))
+    if not per:
+        return "(no span records in stream)"
+    per.sort(key=lambda x: x[1])
+    n = len(per)
+    buckets = [
+        ("<=p50", 0.0, 0.5),
+        ("p50-p90", 0.5, 0.9),
+        ("p90-p99", 0.9, 0.99),
+        (">p99", 0.99, 1.0),
+    ]
+    phases = ("queue", "prefix_lookup", "prefill", "handoff", "wait")
+    lines = [
+        "| TTFT bucket | reqs | TTFT ms (min-max) | dominant phase | "
+        + " | ".join(f"{p} %" for p in phases)
+        + " |",
+        "|---|---|---|---|" + "---|" * len(phases),
+    ]
+    for name, lo, hi in buckets:
+        grp = per[int(lo * n) : max(int(lo * n) + 1, round(hi * n))]
+        if not grp:
+            continue
+        agg = {p: 0.0 for p in phases}
+        for _, _, shares in grp:
+            for p, v in shares.items():
+                agg[p] = agg.get(p, 0.0) + v
+        total = sum(agg.values()) or 1.0
+        dom = max(agg, key=lambda p: agg[p])
+        lines.append(
+            "| {b} | {n} | {lo:.2f}-{hi:.2f} | {dom} ({ds:.0%}) | ".format(
+                b=name, n=len(grp), lo=grp[0][1] * 1e3,
+                hi=grp[-1][1] * 1e3, dom=dom, ds=agg[dom] / total,
+            )
+            + " | ".join(f"{100 * agg[p] / total:.1f}" for p in phases)
+            + " |"
+        )
+    return "\n".join(lines)
+
+
 def _load_rows(path: str) -> list[dict] | dict:
     """A single JSON document -> as parsed; a jsonl of flat records ->
     list (a jsonl's first line parses but leaves extra data, so the
@@ -275,6 +336,8 @@ if __name__ == "__main__":
         print(soak_table(load_soak(path)))
     elif which == "moe":
         print(moe_table(load(path)))
+    elif which == "spans":
+        print(spans_table(load(path)))
     elif which == "roofline":
         print(roofline_table(load(path)))
     else:

@@ -38,8 +38,15 @@ phase end:
     tokens handed back (token conservation);
   * replaying the emitted JSONL stream (``tracker.replay_summary``)
     reproduces every engine's live summary counters exactly;
-  * TTFT/TPOT percentiles stay inside a loose SLO band (the soak is a
-    conservation test, not a latency benchmark).
+  * the lifecycle spans in the same stream decompose *exactly*
+    (``spans.validate_trace``): every completed request's phase spans
+    tile [submit, done] with zero gaps, and its admit/first stamps sit
+    on span boundaries — probed per phase, since the three phases reuse
+    request ids on one stream;
+  * TTFT/TPOT percentiles stay inside a loose SLO band — measured
+    submit-relative (arrival to first token), so queue wait counts
+    against the band (the soak is a conservation test, not a latency
+    benchmark).
 
 The run summary is appended to ``BENCH_trajectory.json`` at the repo
 root (see ``benchmarks/trajectory.py``) — the longitudinal record.
@@ -156,6 +163,27 @@ class _Probe:
             )
 
 
+def _span_check(records, label: str) -> list[str]:
+    """The span conservation law: each completed request's phase spans
+    tile [submit, done] exactly. One phase's record slice at a time —
+    request ids repeat across the soak's phases."""
+    from repro.runtime.spans import validate_trace
+
+    return [f"{label}: {e}" for e in validate_trace(records)]
+
+
+def _handoff_transit_p95(records) -> float:
+    """p95 handoff span duration (prefill-side KV transit) in seconds."""
+    import numpy as np
+
+    durs = [
+        r["t1"] - r["t0"]
+        for r in records
+        if r.get("kind") == "span" and r.get("phase") == "handoff"
+    ]
+    return float(np.percentile(durs, 95)) if durs else 0.0
+
+
 def _replay_check(records, engines) -> list[str]:
     """The tracker conservation law: stream replay == live summaries."""
     from repro.runtime.tracker import replay_summary
@@ -217,10 +245,11 @@ def run_soak(
     span_s = virtual_hours * 3600.0 / max(1, n_segments)
     tracker = JsonlTracker(trace_out) if trace_out else NullTracker()
 
+    soak_slo = SloPolicy(ttft=SLO_TTFT_S, tpot=SLO_TPOT_S)
     cluster = FleetCluster(
         cfg, params, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
         block_tokens=BLOCK, cost=cost, policy="prefix-aware",
-        prefix_cache=True, tracker=tracker,
+        prefix_cache=True, tracker=tracker, slo=soak_slo,
     )
     probe = _Probe(check_every)
     history: dict[int, tuple] = {}
@@ -289,7 +318,8 @@ def run_soak(
     n_fleet_lines = len(fleet_records)
     if trace_out:
         errors.extend(_replay_check(fleet_records, cluster.engines))
-    slo = slo_report(all_timings, SloPolicy(ttft=SLO_TTFT_S, tpot=SLO_TPOT_S))
+        errors.extend(_span_check(fleet_records, "fleet spans"))
+    slo = slo_report(all_timings, soak_slo)
     if slo.completed and slo.slo_met < slo.completed * 0.9:
         errors.append(
             f"SLO band: only {slo.slo_met}/{slo.completed} met "
@@ -306,10 +336,19 @@ def run_soak(
     disagg = DisaggCluster(
         cfg, params, n_engines=3, slots=SLOTS, max_len=MAX_LEN,
         block_tokens=BLOCK, cost=cost, spec=spec, tracker=tracker,
+        slo=soak_slo,
     )
+    import dataclasses
+
     from repro.runtime.cluster.traffic import synthesize
 
-    dres = disagg.run(synthesize(spec), round_hook=probe)
+    # phases share one tracker stream: keep rids globally unique so the
+    # span/event timelines never collide (the per-phase validate_trace
+    # slices don't need it, but report/export tooling reads whole files)
+    dtrace = [
+        dataclasses.replace(r, rid=r.rid + rid0) for r in synthesize(spec)
+    ]
+    dres = disagg.run(dtrace, round_hook=probe)
     handoffs = sum(
         e.scheduler.stats.handoffs for e in disagg.prefill_engines
     )
@@ -322,6 +361,7 @@ def run_soak(
     if trace_out:
         disagg_records = read_jsonl(trace_out)[n_fleet_lines:]
         errors.extend(_replay_check(disagg_records, disagg.engines))
+        errors.extend(_span_check(disagg_records, "disagg spans"))
     n_disagg_lines = n_fleet_lines + (
         len(disagg_records) if trace_out else 0
     )
@@ -342,19 +382,21 @@ def run_soak(
     mfresh = lambda k: rng.integers(0, mcfg.vocab, size=(k,)).astype(
         np.int32
     )
+    moe0 = rid0 + spec.n_requests
     moe_trace = [
-        ClientRequest(i, 0.001 * i, mfresh(int(rng.integers(8, 17))),
+        ClientRequest(moe0 + i, 0.001 * i, mfresh(int(rng.integers(8, 17))),
                       int(rng.choice((4, 8))), i)
         for i in range(requests_per_segment - 1)
     ]
-    over = requests_per_segment - 1
+    over = moe0 + requests_per_segment - 1
     moe_trace.append(  # over-budget: 32 + 4 > moe_budget on every engine
-        ClientRequest(over, 0.001 * over, mfresh(32), 4, over)
+        ClientRequest(over, 0.001 * (over - moe0), mfresh(32), 4, over)
     )
     moe_cluster = FleetCluster(
         mcfg, mparams, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
         block_tokens=BLOCK, cost=mcost, policy="prefix-aware",
         prefix_cache=True, token_budget=moe_budget, tracker=tracker,
+        slo=soak_slo,
     )
     mres = moe_cluster.run(moe_trace, round_hook=probe)
     if len(mres.outputs) != len(moe_trace):
@@ -374,6 +416,7 @@ def run_soak(
     if trace_out:
         moe_records = read_jsonl(trace_out)[n_disagg_lines:]
         errors.extend(_replay_check(moe_records, moe_cluster.engines))
+        errors.extend(_span_check(moe_records, "moe spans"))
     tracker.finish()
 
     assert math.isfinite(clock_h)
@@ -399,8 +442,20 @@ def run_soak(
             len(fleet_records) + len(disagg_records) + len(moe_records)
             if trace_out else 0
         ),
+        "span_records": (
+            sum(
+                1
+                for r in fleet_records + disagg_records + moe_records
+                if r.get("kind") == "span"
+            )
+            if trace_out else 0
+        ),
         "ttft_p95_s": round(slo.ttft_p95, 3),
         "tpot_p95_s": round(slo.tpot_p95, 3),
+        "queue_wait_p95_s": round(slo.queue_wait_p95, 6),
+        "handoff_transit_p95_s": round(
+            _handoff_transit_p95(disagg_records if trace_out else []), 9
+        ),
         "wall_s": round(time.monotonic() - t_wall, 2),
         "errors": errors,
         "ok": not errors,

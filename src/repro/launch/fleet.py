@@ -84,6 +84,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="append one JSONL record per engine round "
                          "(runtime.tracker stream, all engines interleaved; "
                          "replay with runtime.tracker.replay_summary)")
+    ap.add_argument("--trace-spans", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="emit per-request lifecycle span records into "
+                         "--trace-out (runtime.spans; export with "
+                         "perf.trace_export; --no-trace-spans for "
+                         "rounds-only streams)")
     return ap
 
 
@@ -110,6 +116,8 @@ def build_cluster(cfg, full_cfg, params, args, spec):
         prefix_cache=args.prefix_cache
         and cfg.family in PREFIX_CACHE_FAMILIES,
         tracker=tracker,
+        trace_spans=getattr(args, "trace_spans", True),
+        slo=SloPolicy(ttft=args.slo_ttft, tpot=args.slo_tpot),
     )
     n = 1 if args.mode == "single" else args.engines
     if args.mode == "disagg":
@@ -203,6 +211,22 @@ def main(argv=None) -> int:
         f"{r['ttft_p95']*1e3:.1f}/{r['ttft_p99']*1e3:.1f} ms, "
         f"TPOT p50/p99 {r['tpot_p50']*1e3:.2f}/{r['tpot_p99']*1e3:.2f} ms"
     )
+    print(
+        f"[fleet/{args.mode}] queue wait p50/p95 "
+        f"{r['queue_wait_p50']*1e3:.2f}/{r['queue_wait_p95']*1e3:.2f} ms, "
+        f"TTFT-from-admit p95 {r['ttft_admit_p95']*1e3:.1f} ms "
+        "(spread from TTFT p95 is the queue)"
+    )
+    ss = result.slo_summary
+    if ss:
+        burns = ", ".join(
+            f"{k[5:]}={ss[k]:.2f}" for k in sorted(ss) if k.startswith("burn_")
+        )
+        print(
+            f"[fleet/{args.mode}] SLO monitor: {ss.get('observed', 0)} "
+            f"observed, {ss.get('violations', 0)} violations"
+            + (f", burn rates [{burns}]" if burns else "")
+        )
     for s in result.engine_summaries:
         line = (
             f"[fleet]   engine {s['engine']} ({s['role']}): "
@@ -226,6 +250,7 @@ def main(argv=None) -> int:
             "split": list(getattr(cluster, "split", ()) or ()),
             "report": r,
             "engine_summaries": result.engine_summaries,
+            "slo_summary": result.slo_summary,
         }
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)

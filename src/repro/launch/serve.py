@@ -80,10 +80,19 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
     if args.prefix_cache and cfg.family in PREFIX_CACHE_FAMILIES:
         prefix_cache = PrefixCache(pool)
     tracker = None
+    spans = None
     if getattr(args, "trace_out", None):
         from repro.runtime.tracker import JsonlTracker
 
         tracker = JsonlTracker(args.trace_out)
+        if getattr(args, "trace_spans", True):
+            # standalone serving has no virtual clock: spans are stamped
+            # on the host monotonic clock instead (same record schema,
+            # same Perfetto export; decomposition exactness is a
+            # virtual-clock property and not asserted here)
+            from repro.runtime.spans import SpanRecorder
+
+            spans = SpanRecorder(time.monotonic, tracker=tracker)
     return Scheduler(
         cfg,
         params,
@@ -102,6 +111,7 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
         residency=build_residency_plan(cfg, args),
         prefix_cache=prefix_cache,
         tracker=tracker,
+        spans=spans,
     )
 
 
@@ -143,6 +153,7 @@ def run_pool_engine(cfg, params, args) -> dict:
         "residency": (
             sched.residency.summary() if sched.residency is not None else None
         ),
+        "span_records": sched.spans.n_spans if sched.spans else 0,
         "outputs": outputs,
     }
 
@@ -291,6 +302,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--trace-out", default="",
                     help="append one JSONL record per scheduler round "
                          "(runtime.tracker stream; pool engine only)")
+    ap.add_argument("--trace-spans", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="emit per-request lifecycle span records into "
+                         "--trace-out (wall-clock stamps; export with "
+                         "perf.trace_export; --no-trace-spans for "
+                         "rounds-only streams)")
     return ap
 
 

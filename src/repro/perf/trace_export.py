@@ -1,0 +1,238 @@
+"""JSONL serve traces -> Chrome/Perfetto ``trace_event`` JSON.
+
+``runtime.tracker.JsonlTracker`` streams interleave per-round metrics
+records with per-request lifecycle spans (``runtime.spans``). This
+module converts such a stream into the Trace Event Format that
+https://ui.perfetto.dev and ``chrome://tracing`` open natively:
+
+  * one *process* track per engine (pid = engine id, named with its
+    role from the hparams records),
+  * one *thread* row per request (tid = rid) carrying its phase spans
+    as complete ("X") events,
+  * flow arrows ("s"/"f") for cross-engine motion: a prefill->decode
+    handoff connects the handoff span to the decode engine's first
+    span, and a drain/requeue connects the aborted span to the
+    request's next queue span on the new engine,
+  * counter ("C") tracks per engine from the round records' gauges
+    (pool utilization, queue depth, active lanes).
+
+Timestamps are microseconds (the trace_event unit); the virtual clock's
+nanosecond rounding survives exactly. ``validate_trace_events`` checks
+the shape the viewers require — CI runs it against the soak trace so a
+schema regression fails the build, not the human opening the file.
+
+CLI::
+
+    python -m repro.perf.trace_export soak_trace.jsonl \
+        [-o soak_trace.perfetto.json] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Iterable
+
+_US = 1e6  # seconds -> microseconds
+
+# span attrs lifted into trace_event args (everything non-positional)
+_SPAN_BASE = {"kind", "rid", "phase", "t0", "t1", "engine", "role"}
+
+
+def _span_args(s: dict) -> dict:
+    return {k: v for k, v in s.items() if k not in _SPAN_BASE}
+
+
+def to_trace_events(records: Iterable[dict]) -> dict:
+    """Convert a tracker record stream to a trace_event document."""
+    records = list(records)
+    events: list[dict] = []
+    engines: dict[int, str] = {}
+    for r in records:
+        if r.get("kind") == "hparams" and r.get("surface") == "engine":
+            engines[int(r["engine"])] = str(r.get("role", "both"))
+
+    spans = [r for r in records if r.get("kind") == "span"]
+    by_rid: dict[int, list[dict]] = {}
+    for s in spans:
+        by_rid.setdefault(int(s["rid"]), []).append(s)
+    for ss in by_rid.values():
+        ss.sort(key=lambda s: (s["t0"], s["t1"]))
+
+    seen_pids: set[int] = set()
+    for s in spans:
+        pid = int(s.get("engine", 0))
+        seen_pids.add(pid)
+        events.append(
+            {
+                "ph": "X",
+                "name": s["phase"],
+                "cat": "span",
+                "pid": pid,
+                "tid": int(s["rid"]),
+                "ts": s["t0"] * _US,
+                "dur": (s["t1"] - s["t0"]) * _US,
+                "args": _span_args(s),
+            }
+        )
+
+    # process metadata: one named track per engine
+    for pid in sorted(seen_pids | set(engines)):
+        role = engines.get(pid, "both")
+        events.append(
+            {
+                "ph": "M",
+                "name": "process_name",
+                "pid": pid,
+                "args": {"name": f"engine {pid} ({role})"},
+            }
+        )
+
+    # flow arrows: handoff transit and drain->requeue motion
+    flow_id = 0
+    for rid, ss in sorted(by_rid.items()):
+        for i, s in enumerate(ss):
+            nxt = next(
+                (
+                    n
+                    for n in ss[i + 1 :]
+                    if n.get("engine") != s.get("engine")
+                ),
+                None,
+            )
+            arrow = None
+            if s["phase"] == "handoff" and nxt is not None:
+                arrow = "handoff"
+            elif s.get("aborted") and nxt is not None:
+                arrow = "requeue"
+            if arrow is None:
+                continue
+            flow_id += 1
+            common = {"cat": arrow, "name": arrow, "id": flow_id}
+            events.append(
+                {
+                    "ph": "s",
+                    "pid": int(s.get("engine", 0)),
+                    "tid": rid,
+                    "ts": s["t1"] * _US,
+                    **common,
+                }
+            )
+            events.append(
+                {
+                    "ph": "f",
+                    "bp": "e",
+                    "pid": int(nxt.get("engine", 0)),
+                    "tid": rid,
+                    "ts": nxt["t0"] * _US,
+                    **common,
+                }
+            )
+
+    # engine gauges from the round records as counter tracks
+    for r in records:
+        if r.get("kind", "metrics") != "metrics" or "clock_s" not in r:
+            continue
+        pid = int(r.get("engine", 0))
+        ts = r["clock_s"] * _US
+        for key in ("pool_utilization", "queued", "active"):
+            if key in r:
+                events.append(
+                    {
+                        "ph": "C",
+                        "name": key,
+                        "pid": pid,
+                        "ts": ts,
+                        "args": {key: r[key]},
+                    }
+                )
+
+    events.sort(key=lambda e: (e.get("ts", 0.0), e.get("pid", 0)))
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def validate_trace_events(doc: dict) -> list[str]:
+    """Shape checks against the trace_event format. Empty == loadable."""
+    errors: list[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["document must be an object with a 'traceEvents' list"]
+    evs = doc["traceEvents"]
+    if not isinstance(evs, list):
+        return ["'traceEvents' must be a list"]
+    flows: dict[object, list[str]] = {}
+    for i, e in enumerate(evs):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in ("X", "M", "C", "s", "f", "i", "b", "e"):
+            errors.append(f"{where}: unknown ph {ph!r}")
+            continue
+        if "name" not in e:
+            errors.append(f"{where}: missing name")
+        if ph != "M" and not isinstance(e.get("ts"), (int, float)):
+            errors.append(f"{where}: ph={ph} needs a numeric ts")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{where}: X event needs dur >= 0, got {dur!r}")
+        if ph in ("s", "f"):
+            if "id" not in e:
+                errors.append(f"{where}: flow event needs an id")
+            else:
+                flows.setdefault(e["id"], []).append(ph)
+    for fid, phs in sorted(flows.items(), key=lambda kv: str(kv[0])):
+        if sorted(phs) != ["f", "s"]:
+            errors.append(f"flow id {fid!r}: unpaired steps {phs}")
+    return errors
+
+
+def main(argv=None) -> int:
+    from repro.runtime.tracker import read_jsonl
+
+    ap = argparse.ArgumentParser(
+        description="Convert a JSONL serve trace to Perfetto trace_event "
+        "JSON (open at https://ui.perfetto.dev)."
+    )
+    ap.add_argument("trace", help="JsonlTracker stream (one object/line)")
+    ap.add_argument(
+        "-o",
+        "--out",
+        default=None,
+        help="output path (default: <trace>.perfetto.json)",
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate the exported document; non-zero exit on errors",
+    )
+    args = ap.parse_args(argv)
+
+    records = read_jsonl(args.trace)
+    doc = to_trace_events(records)
+    out = Path(
+        args.out
+        if args.out is not None
+        else str(Path(args.trace).with_suffix("")) + ".perfetto.json"
+    )
+    out.write_text(json.dumps(doc) + "\n")
+    n_spans = sum(1 for e in doc["traceEvents"] if e["ph"] == "X")
+    n_flows = sum(1 for e in doc["traceEvents"] if e["ph"] == "s")
+    print(
+        f"{out}: {len(doc['traceEvents'])} events "
+        f"({n_spans} spans, {n_flows} flows)"
+    )
+    if args.check:
+        errors = validate_trace_events(doc)
+        for err in errors:
+            print(f"INVALID: {err}")
+        if errors:
+            return 1
+        print("trace_event shape: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,6 +18,7 @@ from repro.runtime.cluster.disagg import (
 )
 from repro.runtime.cluster.engine import Engine, StepCostModel
 from repro.runtime.cluster.router import FleetCluster, FleetRunResult, Router
+from repro.runtime.spans import SLOMonitor, SpanRecorder, VirtualClock
 from repro.runtime.cluster.traffic import (
     ClientRequest,
     RequestTiming,
@@ -37,10 +38,13 @@ __all__ = [
     "RequestTiming",
     "RoleRates",
     "Router",
+    "SLOMonitor",
     "SloPolicy",
     "SloReport",
+    "SpanRecorder",
     "StepCostModel",
     "TrafficSpec",
+    "VirtualClock",
     "measured_role_rates",
     "provision_split",
     "slo_report",

@@ -46,6 +46,7 @@ from repro.models.lm import SamplingParams
 from repro.runtime.cluster.engine import Engine, StepCostModel
 from repro.runtime.cluster.router import FleetCluster, Router
 from repro.runtime.cluster.traffic import TrafficSpec
+from repro.runtime.spans import SLOMonitor
 
 # one KV-handoff stream per prefill engine (the async-FIFO analogue)
 HANDOFF_PORTS = 1
@@ -122,6 +123,8 @@ class DisaggCluster(FleetCluster):
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
         tracker=None,
+        trace_spans: bool = True,
+        slo=None,
     ):
         # hybrids now disaggregate too: the PrefillHandoff payload carries
         # the SSM lane-state snapshot next to the KV-block rows
@@ -142,6 +145,7 @@ class DisaggCluster(FleetCluster):
         self.cfg = cfg
         self.split = split
         self.tracker = tracker
+        self.slo = slo
         mk = lambda i, role: Engine(
             i,
             cfg,
@@ -155,6 +159,8 @@ class DisaggCluster(FleetCluster):
             sampling=sampling,
             prefix_cache=prefix_cache,
             tracker=tracker,
+            trace_spans=trace_spans,
+            slo=slo,
         )
         self.prefill_engines = [mk(i, "prefill") for i in range(n_p)]
         self.decode_engines = [mk(n_p + i, "decode") for i in range(n_d)]
@@ -164,6 +170,7 @@ class DisaggCluster(FleetCluster):
         self.timings = {}
         self._by_rid = {}
         self._awaiting: list = []  # payloads no decode engine can hold yet
+        self.slo_monitor = SLOMonitor(slo)
 
     def _route_payloads(self) -> None:
         """Move prefilled KV payloads to the least-loaded decode engine

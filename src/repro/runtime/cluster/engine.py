@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 
 import jax.numpy as jnp
 import numpy as np
@@ -28,11 +29,8 @@ from repro.models.config import (
 from repro.models.lm import SamplingParams
 from repro.perf.roofline import HW, HwModel
 from repro.runtime.kv_pool import KVPool
-from repro.runtime.scheduler import (
-    PrefillHandoff,
-    RequestState,
-    Scheduler,
-)
+from repro.runtime.scheduler import PrefillHandoff, Scheduler
+from repro.runtime.spans import SLOMonitor, SpanRecorder, VirtualClock
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,15 +117,30 @@ class Engine:
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
         tracker=None,
+        trace_spans: bool = True,
+        slo=None,
     ):
         assert role in ("both", "prefill", "decode"), role
         self.engine_id = engine_id
         self.cfg = cfg
         self.role = role
         self.cost = cost
-        self.clock = 0.0
+        # the engine, its span recorder and the scheduler's charge hook
+        # all share one clock object, so mid-round work is stamped at
+        # the instant it is charged (not at round granularity)
+        self._vclock = VirtualClock()
         self.drained = False
         self.tracker = tracker
+        self.spans = SpanRecorder(
+            self._vclock.now,
+            tracker=tracker if trace_spans else None,
+            engine=engine_id,
+            role=role,
+        )
+        # streaming TTFT/TPOT/queue-wait histograms + burn rates against
+        # ``slo`` (``traffic.SloPolicy``; None = histograms only)
+        self.slo_monitor = SLOMonitor(slo)
+        self._marks: dict[int, dict[str, float]] = {}
         pool = KVPool.for_slots(
             cfg, slots=slots, max_len=max_len, block_tokens=block_tokens
         )
@@ -146,7 +159,12 @@ class Engine:
             sampling=sampling,
             handoff=self._on_handoff if role == "prefill" else None,
             prefix_cache=cache,
+            spans=self.spans,
         )
+        # incremental virtual-time charging: every prefill/decode step
+        # advances the clock as it runs, so span boundaries and the
+        # round record's clock_s come from the same accounting
+        self.scheduler.charge = self._charge_work
         # unified observability: intercept the scheduler's per-round
         # record so it is logged with the *post-round* virtual clock and
         # this engine's identity merged in (one record per round still)
@@ -173,10 +191,33 @@ class Engine:
         self._imports: list[tuple[float, int]] = []  # (ready_at, rid)
         self._import_payloads: dict[int, PrefillHandoff] = {}
         self._import_tokens = 0
-        self._charged_prefill_tokens = 0
-        self._out_seen: dict[int, int] = {}
-        # (kind, rid, t) with kind in {"first", "done"}; the cluster drains
+        # (kind, rid, t) with kind in {"admit", "first", "done",
+        # "handoff"}; stamped by the span recorder, drained by the cluster
         self.events: list[tuple[str, int, float]] = []
+
+    # ---------------- virtual clock ----------------
+
+    @property
+    def clock(self) -> float:
+        return self._vclock.t
+
+    @clock.setter
+    def clock(self, t: float) -> None:
+        # external writes (router arrival alignment, import waits) keep
+        # working; the shared VirtualClock makes them visible to the
+        # recorder and charge hook too
+        self._vclock.t = t
+
+    def _charge_work(self, op: str, *, tokens: int = 0, steps: int = 0):
+        if op == "prefill":
+            self._vclock.advance(
+                tokens * self.cost.prefill_s_per_token
+                + steps * self.cost.prefill_s_per_step
+            )
+        elif op == "decode":
+            self._vclock.advance(steps * self.cost.decode_s_per_step)
+        else:  # pragma: no cover - scheduler only charges these two
+            raise ValueError(f"unknown charge op {op!r}")
 
     # ---------------- load / admission ----------------
 
@@ -219,8 +260,16 @@ class Engine:
             prompt, anchor=(self.cfg.family == "hybrid")
         )
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int, rid: int):
-        self.scheduler.submit(prompt, max_new_tokens, rid=rid)
+    def submit(
+        self,
+        prompt: np.ndarray,
+        max_new_tokens: int,
+        rid: int,
+        t_submit: float | None = None,
+    ):
+        t_sub = self.clock if t_submit is None else t_submit
+        self._marks[rid] = {"submit": t_sub}
+        self.scheduler.submit(prompt, max_new_tokens, rid=rid, t_submit=t_sub)
 
     def offer_import(self, ready_at: float, payload: PrefillHandoff) -> None:
         bisect.insort(self._imports, (ready_at, payload.rid))
@@ -237,16 +286,23 @@ class Engine:
     # ---------------- handoff (prefill role) ----------------
 
     def _on_handoff(self, payload: PrefillHandoff) -> None:
-        """Scheduler hook: charge this prompt's prefill precisely (so
-        per-request TTFT is not round-granular) and stamp the payload's
-        interconnect-ready time."""
-        self.clock += (
-            payload.n_tokens * self.cost.prefill_s_per_token
-            + self.cost.prefill_s_per_step
-        )
-        self._charged_prefill_tokens += payload.n_tokens
+        """Scheduler hook: stamp the payload's interconnect-ready time
+        (prefill itself was already charged incrementally) and record
+        the transit as this request's ``handoff`` span — the decode-side
+        timeline resumes exactly at ``ready``."""
+        t0 = self.spans.now()
         ready = self.clock + payload.n_tokens * self.cost.handoff_s_per_token
         self.outbox.append((ready, payload))
+        self.spans.mark(
+            payload.rid,
+            "handoff",
+            t0,
+            ready,
+            tokens=payload.n_tokens,
+            kv_bytes=payload.kv_bytes,
+        )
+        self.spans.event("handoff", payload.rid, t0)
+        self.spans.forget(payload.rid)
 
     # ---------------- the engine round ----------------
 
@@ -263,67 +319,62 @@ class Engine:
                 else:
                     break
             payload = self._import_payloads[rid]
-            if not self.scheduler.import_prefilled(payload):
+            if not self.scheduler.import_prefilled(payload, ready_at=ready_at):
                 break  # no lane/budget yet; decode below frees one
             self._imports.pop(0)
             del self._import_payloads[rid]
             self._import_tokens -= payload.total_tokens
-            req = self.scheduler.requests[rid]
-            self._out_seen[rid] = len(req.output)
-            self.events.append(("first", rid, self.clock))
-            if req.state is RequestState.DONE:
-                # a one-token request finishes at the moment of import
-                self.events.append(("done", rid, self.clock))
 
     def step_round(self) -> None:
-        """One scheduler round, charged on the virtual clock."""
-        events_seen = len(self.events)
+        """One scheduler round on the virtual clock.
+
+        Work is charged *incrementally* by the scheduler's charge hook
+        (each prefill/decode step advances the shared clock the instant
+        it runs), so the only cost added here is the per-round host
+        overhead — and the milestone events / spans the scheduler
+        recorded already carry exact mid-round timestamps."""
         self._try_imports()
-        stats = self.scheduler.stats
-        pt0 = stats.prefill_tokens
-        ps0 = stats.prefill_steps
-        ds0 = stats.decode_steps
-        self._charged_prefill_tokens = 0
-        charged_steps0 = stats.handoffs
         self.scheduler.round()
-        # handoffs were charged precisely in the hook; the deltas cover
-        # everything else (clamped: a chunked prompt's earlier rounds may
-        # already have charged tokens the hook re-counts)
-        d_tokens = (
-            stats.prefill_tokens - pt0 - self._charged_prefill_tokens
-        )
-        d_steps = (stats.prefill_steps - ps0) - (
-            stats.handoffs - charged_steps0
-        )
-        self.clock += (
-            max(0, d_tokens) * self.cost.prefill_s_per_token
-            + max(0, d_steps) * self.cost.prefill_s_per_step
-            + (stats.decode_steps - ds0) * self.cost.decode_s_per_step
-            + self.cost.round_overhead_s
-        )
-        self._collect_events()
-        # the scheduler's round record, stamped with the charged clock
-        # and this round's virtual-time first/done events
+        self._vclock.advance(self.cost.round_overhead_s)
+        new_events = self.spans.drain_events()
+        self._note_events(new_events)
+        self.events.extend(new_events)
+        # the scheduler's round record, stamped with the post-round
+        # clock and this round's virtual-time milestone events
         for rec in self._pending_records:
             rec["engine"] = self.engine_id
             rec["role"] = self.role
             rec["clock_s"] = round(self.clock, 9)
-            rec["events"] = [
-                (kind, rid, round(t, 9))
-                for kind, rid, t in self.events[events_seen:]
-            ]
+            rec["events"] = list(new_events)
             self.tracker.log_metrics(rec, step=rec["round"])
         self._pending_records.clear()
+        self.spans.flush()
 
-    def _collect_events(self) -> None:
-        for rid, req in self.scheduler.requests.items():
-            n = len(req.output)
-            prev = self._out_seen.get(rid, 0)
-            if prev == 0 and n > 0 and req.state is not RequestState.HANDOFF:
-                self.events.append(("first", rid, self.clock))
-            if req.state is RequestState.DONE and prev < n:
-                self.events.append(("done", rid, self.clock))
-            self._out_seen[rid] = n
+    def _note_events(self, events) -> None:
+        """Fold milestone events into the per-request marks and, at
+        completion, feed the streaming SLO monitor."""
+        for kind, rid, t in events:
+            marks = self._marks.setdefault(rid, {})
+            if kind == "handoff":
+                # finishes elsewhere; the decode engine observes it
+                self._marks.pop(rid, None)
+                continue
+            marks[kind] = t
+            if kind != "done":
+                continue
+            req = self.scheduler.requests.get(rid)
+            n = len(req.output) if req is not None else 0
+            first = marks.get("first", t)
+            sub = marks.get("submit", math.nan)
+            adm = marks.get("admit", math.nan)
+            self.slo_monitor.observe(
+                t=t,
+                ttft=first - sub,
+                ttft_admit=first - adm,
+                tpot=(t - first) / (n - 1) if n > 1 else 0.0,
+                queue_wait=adm - sub,
+            )
+            self._marks.pop(rid, None)
 
     # ---------------- drain ----------------
 
@@ -331,7 +382,10 @@ class Engine:
         """Stop intake and hand queued (and mid-chunked-prefill)
         requests back to the router."""
         self.drained = True
-        return self.scheduler.drain()
+        moved = self.scheduler.drain()
+        for req in moved:
+            self._marks.pop(req.rid, None)
+        return moved
 
     def undrain(self) -> None:
         """Reopen intake after a drain — soak churn cycles an engine out
@@ -357,4 +411,6 @@ class Engine:
             "generated_tokens": s.generated_tokens,
             "expert_tokens": s.expert_tokens,
             "pool_utilization": round(s.steady_state_utilization, 4),
+            "spans": self.spans.n_spans,
+            "slo": self.slo_monitor.summary(now=self.clock),
         }

@@ -47,6 +47,7 @@ from collections import deque
 from repro.models.config import CHUNKABLE_FAMILIES, ModelConfig
 from repro.models.lm import SamplingParams
 from repro.runtime.cluster.engine import Engine, StepCostModel
+from repro.runtime.spans import SLOMonitor
 from repro.runtime.cluster.traffic import (
     ClientRequest,
     RequestTiming,
@@ -149,7 +150,14 @@ class Router:
             if not engine.has_work():
                 # an idle engine cannot have started before the arrival
                 engine.clock = max(engine.clock, creq.t_arrival)
-            engine.submit(creq.prompt, creq.max_new_tokens, creq.rid)
+            # queue wait is measured from the client arrival (also after
+            # a drain/requeue: the request's clock never restarts)
+            engine.submit(
+                creq.prompt,
+                creq.max_new_tokens,
+                creq.rid,
+                t_submit=creq.t_arrival,
+            )
             self.affinity[creq.session] = engine.engine_id
             self.assignments.setdefault(creq.rid, []).append(
                 engine.engine_id
@@ -166,6 +174,9 @@ class FleetRunResult:
     timings: dict[int, RequestTiming]
     engine_summaries: list[dict]
     assignments: dict[int, list[int]]
+    # fleet-level SLOMonitor.summary(): streaming TTFT/TPOT/queue-wait
+    # histograms + multi-window burn rates (empty without completions)
+    slo_summary: dict = dataclasses.field(default_factory=dict)
 
     def report(self, slo: SloPolicy) -> SloReport:
         return slo_report(self.timings, slo)
@@ -189,9 +200,12 @@ class FleetCluster:
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
         tracker=None,
+        trace_spans: bool = True,
+        slo: SloPolicy | None = None,
     ):
         self.cfg = cfg
         self.tracker = tracker
+        self.slo = slo
         self.engines = [
             Engine(
                 i,
@@ -206,12 +220,18 @@ class FleetCluster:
                 sampling=sampling,
                 prefix_cache=prefix_cache,
                 tracker=tracker,
+                trace_spans=trace_spans,
+                slo=slo,
             )
             for i in range(n_engines)
         ]
         self.router = Router(self.engines, policy)
         self.timings: dict[int, RequestTiming] = {}
         self._by_rid: dict[int, ClientRequest] = {}
+        # fleet-level streaming SLO view: fed from completion events
+        # with full (submit, admit, first, done) milestones — the
+        # cross-engine complement of each engine's own monitor
+        self.slo_monitor = SLOMonitor(slo)
 
     # hooks the disaggregated subclass specialises -----------------------
 
@@ -243,10 +263,23 @@ class FleetCluster:
     def _absorb_events(self, engine: Engine) -> None:
         for kind, rid, t in engine.events:
             timing = self.timings[rid]
-            if kind == "first" and math.isnan(timing.t_first):
+            if kind == "admit":
+                # last admission wins: a drained-and-requeued request
+                # re-admits elsewhere, and only that one leads anywhere
+                timing.t_admit = t
+            elif kind == "first" and math.isnan(timing.t_first):
                 timing.t_first = t
             elif kind == "done":
                 timing.t_done = t
+                req = engine.scheduler.requests.get(rid)
+                n = len(req.output) if req is not None else 0
+                self.slo_monitor.observe(
+                    t=t,
+                    ttft=timing.ttft,
+                    ttft_admit=timing.ttft_admit,
+                    tpot=(t - timing.t_first) / (n - 1) if n > 1 else 0.0,
+                    queue_wait=timing.queue_wait,
+                )
         engine.events.clear()
 
     def run(
@@ -266,8 +299,11 @@ class FleetCluster:
         pending = deque(
             sorted(trace, key=lambda r: (r.t_arrival, r.rid))
         )
+        # arrivals rounded like every span/event stamp (spans.NDIGITS),
+        # so queue_wait = t_admit - t_arrival can never go dust-negative
         self.timings = {
-            r.rid: RequestTiming(r.rid, r.t_arrival) for r in trace
+            r.rid: RequestTiming(r.rid, round(r.t_arrival, 9))
+            for r in trace
         }
         self._by_rid = {r.rid: r for r in trace}
         limit = max_rounds or 64 + 4 * sum(
@@ -313,6 +349,7 @@ class FleetCluster:
         outputs: dict[int, list[int]] = {}
         for e in self.engines:
             e.scheduler.pool.validate()
+            e.spans.flush()  # drained engines may hold buffered aborts
             for rid, req in e.scheduler.requests.items():
                 if req.state is RequestState.HANDOFF:
                     continue  # finished on a decode engine
@@ -323,9 +360,11 @@ class FleetCluster:
                 outputs[rid] = req.output
         for rid, timing in self.timings.items():
             timing.n_tokens = len(outputs.get(rid, ()))
+        clock = max((e.clock for e in self.engines), default=0.0)
         return FleetRunResult(
             outputs=outputs,
             timings=self.timings,
             engine_summaries=[e.summary() for e in self.engines],
             assignments=dict(self.router.assignments),
+            slo_summary=self.slo_monitor.summary(now=clock),
         )

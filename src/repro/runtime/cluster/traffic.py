@@ -108,10 +108,18 @@ def synthesize(spec: TrafficSpec) -> list[ClientRequest]:
 
 @dataclasses.dataclass(frozen=True)
 class SloPolicy:
-    """Per-request latency objectives, in virtual seconds."""
+    """Per-request latency objectives, in virtual seconds.
+
+    ``target`` is the availability objective: the fraction of requests
+    that must meet the TTFT/TPOT bounds. Its complement (1 - target) is
+    the error budget that ``spans.SLOMonitor`` burn rates are measured
+    against. TTFT here is *submit-relative* (arrival to first token),
+    so queue wait counts against the objective.
+    """
 
     ttft: float
     tpot: float
+    target: float = 0.9
 
 
 @dataclasses.dataclass
@@ -123,10 +131,25 @@ class RequestTiming:
     t_first: float = math.nan
     t_done: float = math.nan
     n_tokens: int = 0
+    t_admit: float = math.nan  # engine admission (end of queue wait)
 
     @property
     def ttft(self) -> float:
+        """Submit-relative TTFT: arrival to first token. This is the
+        client's TTFT — queue wait included — and the one SLO policies
+        are enforced against."""
         return self.t_first - self.t_arrival
+
+    @property
+    def ttft_admit(self) -> float:
+        """Admission-relative TTFT: engine pickup to first token. The
+        historical (pre-span) reading — it hides queue wait, which is
+        why reports carry both."""
+        return self.t_first - self.t_admit
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_admit - self.t_arrival
 
     @property
     def tpot(self) -> float:
@@ -164,6 +187,14 @@ class SloReport:
     slo_met: int
     goodput_tokens_per_s: float
     throughput_tokens_per_s: float
+    # admission-relative TTFT + queue wait (ttft_* above is
+    # submit-relative; the spread between the two IS the queue)
+    ttft_admit_p50: float = 0.0
+    ttft_admit_p95: float = 0.0
+    ttft_admit_p99: float = 0.0
+    queue_wait_p50: float = 0.0
+    queue_wait_p95: float = 0.0
+    queue_wait_p99: float = 0.0
 
     def row(self) -> dict:
         return {
@@ -178,6 +209,9 @@ def slo_report(
     done = [t for t in timings.values() if not math.isnan(t.t_done)]
     ttfts = [t.ttft for t in done]
     tpots = [t.tpot for t in done]
+    admits = [t for t in done if not math.isnan(t.t_admit)]
+    ttfts_admit = [t.ttft_admit for t in admits]
+    waits = [t.queue_wait for t in admits]
     makespan = max((t.t_done for t in done), default=0.0)
     met = [t for t in done if t.meets(slo)]
     total = sum(t.n_tokens for t in done)
@@ -196,4 +230,10 @@ def slo_report(
         slo_met=len(met),
         goodput_tokens_per_s=good / makespan if makespan > 0 else 0.0,
         throughput_tokens_per_s=total / makespan if makespan > 0 else 0.0,
+        ttft_admit_p50=_pct(ttfts_admit, 50),
+        ttft_admit_p95=_pct(ttfts_admit, 95),
+        ttft_admit_p99=_pct(ttfts_admit, 99),
+        queue_wait_p50=_pct(waits, 50),
+        queue_wait_p95=_pct(waits, 95),
+        queue_wait_p99=_pct(waits, 99),
     )

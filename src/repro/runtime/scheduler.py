@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gals import required_rf
+from repro.runtime.tracker import DELTA_KEYS
 from repro.models.config import (
     CHUNKABLE_FAMILIES,
     PREFIX_CACHE_FAMILIES,
@@ -211,6 +212,7 @@ class Scheduler:
         handoff: Callable[[PrefillHandoff], None] | None = None,
         prefix_cache=None,
         tracker=None,
+        spans=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -314,6 +316,20 @@ class Scheduler:
         self.on_round: Callable[[dict], None] | None = None
         self._emit_base: dict[str, int] = {}
         self._emit_ttft_base = 0
+        # request-lifecycle spans (runtime.spans.SpanRecorder): queue /
+        # prefix_lookup / prefill chunk / decode slice per request, with
+        # exact-decomposition tiling. A fleet Engine passes a recorder on
+        # its virtual clock; bare schedulers may pass a wall-clock one.
+        self.spans = spans
+        # virtual-time charge hook: a fleet Engine installs this so each
+        # unit of work advances the virtual clock at the instant it
+        # happens (charge("prefill", tokens=, steps=) / ("decode",
+        # steps=)) — per-request spans then carry true phase boundaries
+        # instead of round-granular ones.
+        self.charge: Callable[..., None] | None = None
+        # open decode slices: rid -> [t_slice_start, steps] for the
+        # contiguous decode steps a lane ran this round (one span each)
+        self._decode_open: dict[int, list] = {}
         if tracker is not None:
             tracker.log_hyperparameters(
                 {
@@ -339,11 +355,15 @@ class Scheduler:
         max_new_tokens: int,
         *,
         rid: int | None = None,
+        t_submit: float | None = None,
     ) -> int:
         """Queue a request. ``rid`` lets a fleet router assign globally
         unique ids across engines — the sampler is keyed on (seed, rid,
         position), so a request keeps its exact token stream wherever it
-        lands (and across a drain/requeue)."""
+        lands (and across a drain/requeue). ``t_submit`` anchors the
+        request's queue span on the caller's clock (a router passes the
+        client arrival time, so queue wait is measured from submission,
+        not admission)."""
         total = len(prompt) + max_new_tokens
         if len(prompt) < 1 or max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens >= 1")
@@ -380,6 +400,8 @@ class Scheduler:
         req._enter(RequestState.QUEUED)
         self.queue.append(req)
         self.requests[rid] = req
+        if self.spans is not None:
+            self.spans.open(rid, "queue", t0=t_submit)
         return rid
 
     def drain(self) -> list[Request]:
@@ -412,10 +434,14 @@ class Scheduler:
             self._table_dirty = True
             req.output.clear()
             req._enter(RequestState.QUEUED)
+            if self.spans is not None:
+                self.spans.abort(rid, reason="drain")
             out.append(req)
         while self.queue:
             req = self.queue.popleft()
             del self.requests[req.rid]
+            if self.spans is not None:
+                self.spans.abort(req.rid, reason="drain")
             out.append(req)
         return out
 
@@ -501,6 +527,9 @@ class Scheduler:
         if self.handoff is not None:
             self._export_handoff(slot, req)
             return
+        if self.spans is not None:
+            # the first token exists the instant its prefill step ends
+            self.spans.event("first", req.rid)
         req._enter(RequestState.DECODE)
         p = len(req.prompt)
         self._token[slot, 0] = first
@@ -538,11 +567,15 @@ class Scheduler:
         self.stats.handoffs += 1
         self.handoff(payload)
 
-    def import_prefilled(self, payload: PrefillHandoff) -> bool:
+    def import_prefilled(
+        self, payload: PrefillHandoff, *, ready_at: float | None = None
+    ) -> bool:
         """Adopt a request prefilled on another engine: admit its full
         token commitment, scatter the handed-off KV rows into the pool,
         and start its decode lane at the next position. Returns False
         (without side effects) when no lane / budget / pool room is free.
+        ``ready_at`` is the payload's interconnect-ready time — the span
+        timeline resumes there, so any import backlog shows as ``wait``.
         """
         if payload.rid in self.requests:
             raise ValueError(f"request {payload.rid} already on this engine")
@@ -590,6 +623,17 @@ class Scheduler:
             payload.rid, pad_to=self.s_max
         )
         self._table_dirty = True
+        if self.spans is not None:
+            now = self.spans.now()
+            t_ready = now if ready_at is None else min(ready_at, now)
+            self.spans.seed(payload.rid, t_ready)
+            if now > t_ready:
+                self.spans.mark(
+                    payload.rid, "wait", t_ready, now, reason="import"
+                )
+            # the first token arrived with the payload: it becomes
+            # client-visible the instant this engine adopts it
+            self.spans.event("first", payload.rid, now)
         if len(req.output) >= req.max_new_tokens:
             self._complete(slot)
         return True
@@ -617,6 +661,10 @@ class Scheduler:
             return False
         self.queue.popleft()
         req._enter(RequestState.PREFILL)
+        t_admit = 0.0
+        if self.spans is not None:
+            t_admit = self.spans.close(req.rid)  # ends the queue span
+            self.spans.event("admit", req.rid, t_admit)
         self.pool.admit(req.rid, req.total_tokens)
         p = len(req.prompt)
 
@@ -634,6 +682,17 @@ class Scheduler:
             )
             self.stats.prefix_hits += 1
             self.stats.prefix_hit_tokens += match.matched
+        if self.spans is not None and self.prefix_cache is not None:
+            # zero-width on the virtual clock: the lookup is bookkeeping,
+            # but its matched-prefix length is the tuning signal
+            self.spans.mark(
+                req.rid,
+                "prefix_lookup",
+                t_admit,
+                t_admit,
+                matched=match.matched if match is not None else 0,
+                hit=match is not None,
+            )
 
         if self.cfg.family in CHUNKABLE_FAMILIES and (
             match is not None or p > self.prefill_chunk
@@ -668,6 +727,7 @@ class Scheduler:
             )
         padded = np.zeros((1, bucket), np.int32)
         padded[0, :p] = req.prompt
+        t0 = self.spans.now() if self.spans is not None else 0.0
         if self.cfg.family == "hybrid":
             logits, ks, vs, lane = self._prefill(
                 self.params, jnp.asarray(padded), p - 1
@@ -690,6 +750,12 @@ class Scheduler:
         self.pool.write_prefill(req.rid, ks[:, 0], vs[:, 0], n_tokens=p)
         self.stats.prefill_steps += 1
         self.stats.prefill_tokens += p
+        if self.charge is not None:
+            self.charge("prefill", tokens=p, steps=1)
+        if self.spans is not None:
+            self.spans.mark(
+                req.rid, "prefill", t0, self.spans.now(), tokens=p
+            )
 
         first = self._sample_one(req, np.asarray(logits[0, 0, :]))
         self.active[slot] = req.rid
@@ -713,6 +779,7 @@ class Scheduler:
         p = len(req.prompt)
         c = self.prefill_chunk
         n = min(c, p - c0)
+        t0 = self.spans.now() if self.spans is not None else 0.0
         self.pool.note_tokens(rid, c0 + n)
         rows = self.pool.rows_of(rid)[c0 : c0 + n]
         row_table = self.pool.rows_of(rid, pad_to=self.s_max)[None]
@@ -752,6 +819,12 @@ class Scheduler:
                 logits, self.pool.k, self.pool.v = out
         self.stats.prefill_steps += 1
         self.stats.prefill_tokens += n
+        if self.charge is not None:
+            self.charge("prefill", tokens=n, steps=1)
+        if self.spans is not None:
+            self.spans.mark(
+                rid, "prefill", t0, self.spans.now(), tokens=n, chunk_start=c0
+            )
         self._chunk_cursor[rid] = c0 + n
         if c0 + n >= p:
             del self._chunk_cursor[rid]
@@ -801,6 +874,14 @@ class Scheduler:
         self._table_dirty = True
         self.stats.completed += 1
         self.stats.generated_tokens += len(req.output)
+        if self.spans is not None:
+            t = self.spans.now()
+            sl = self._decode_open.pop(rid, None)
+            if sl is not None:
+                # completion lands exactly on this decode slice's end
+                self.spans.mark(rid, "decode", sl[0], t, steps=sl[1])
+            self.spans.event("done", rid, t)
+            self.spans.forget(rid)
 
     def _decoding(self, rid: int | None) -> bool:
         return (
@@ -809,6 +890,7 @@ class Scheduler:
         )
 
     def _decode_step(self) -> None:
+        t0_step = self.spans.now() if self.spans is not None else 0.0
         for i, rid in enumerate(self.active):
             if not self._decoding(rid):
                 continue  # empty lane, or a mid-chunked-prefill reservation
@@ -851,6 +933,18 @@ class Scheduler:
                 jnp.asarray(self._lengths),
             )
         self.stats.decode_steps += 1
+        if self.charge is not None:
+            self.charge("decode", steps=1)
+        if self.spans is not None:
+            # extend (or open) each participating lane's decode slice;
+            # a lane's contiguous steps this round become one span
+            for rid in self.active:
+                if self._decoding(rid):
+                    sl = self._decode_open.get(rid)
+                    if sl is None:
+                        self._decode_open[rid] = [t0_step, 1]
+                    else:
+                        sl[1] += 1
         rows = np.asarray(logits[:, 0, :])
         pool_st = self.pool.stats()
         util = pool_st.utilization
@@ -887,23 +981,19 @@ class Scheduler:
                 break
             self._decode_step()
         self.stats.decode_time += time.monotonic() - t0
+        if self.spans is not None and self._decode_open:
+            # close still-running lanes' slices at the round's decode end
+            t = self.spans.now()
+            for rid, (ts, steps) in self._decode_open.items():
+                self.spans.mark(rid, "decode", ts, t, steps=steps)
+            self._decode_open.clear()
         self.stats.rounds += 1
         if self.tracker is not None or self.on_round is not None:
             self._emit_round()
+        if self.spans is not None:
+            self.spans.flush()
 
     # ---------------- observability ----------------
-
-    _DELTA_FIELDS = (
-        "prefill_steps",
-        "prefill_tokens",
-        "decode_steps",
-        "generated_tokens",
-        "completed",
-        "handoffs",
-        "prefix_hits",
-        "prefix_hit_tokens",
-        "expert_tokens",
-    )
 
     def _emit_round(self) -> None:
         """One structured record per round (see ``runtime.tracker``).
@@ -915,7 +1005,9 @@ class Scheduler:
         exactly."""
         s = self.stats
         rec: dict = {"round": s.rounds}
-        for k in self._DELTA_FIELDS:
+        # the delta set is the tracker's replay contract (DELTA_KEYS):
+        # one source of truth, drift-guarded by delta_coverage_gaps
+        for k in DELTA_KEYS:
             cur = getattr(s, k)
             rec[k] = cur - self._emit_base.get(k, 0)
             self._emit_base[k] = cur

@@ -42,8 +42,15 @@ Record schema (``kind="metrics"``, one per round):
     cache_*               radix-cache gauges when a cache is attached
     engine/role/clock_s   added by ``cluster.Engine`` (virtual clock
                           *after* the round's cost is charged)
-    events                engine-level (kind, rid, t_virtual) TTFT/done
-                          events collected this round
+    events                engine-level (kind, rid, t_virtual) milestone
+                          events collected this round (admit/first/
+                          done/handoff)
+
+A second record kind, ``kind="span"`` (emitted via ``log_spans`` by
+``runtime.spans.SpanRecorder``), interleaves per-request lifecycle
+spans — {rid, phase, t0, t1, engine?, role?, attrs...} — in the same
+stream; ``replay_summary`` ignores them and ``runtime.spans``'s
+``validate_trace`` checks their exact-decomposition contract.
 """
 
 from __future__ import annotations
@@ -81,6 +88,11 @@ class Tracker:
     def log_metrics(self, metrics: dict, *, step: int) -> None:
         raise NotImplementedError
 
+    def log_spans(self, spans: list[dict]) -> None:
+        # optional: per-request lifecycle spans (runtime.spans). Default
+        # no-op so pre-span backends keep working unchanged.
+        pass
+
     def finish(self) -> None:  # optional flush/close
         pass
 
@@ -101,12 +113,16 @@ class MemoryTracker(Tracker):
     def __init__(self):
         self.hparams: list[dict] = []
         self.records: list[dict] = []
+        self.spans: list[dict] = []
 
     def log_hyperparameters(self, hparams: dict) -> None:
         self.hparams.append(dict(hparams))
 
     def log_metrics(self, metrics: dict, *, step: int) -> None:
         self.records.append({**metrics, "step": step})
+
+    def log_spans(self, spans: list[dict]) -> None:
+        self.spans.extend({"kind": "span", **s} for s in spans)
 
 
 class JsonlTracker(Tracker):
@@ -129,6 +145,10 @@ class JsonlTracker(Tracker):
         self._write({"kind": "metrics", "step": step, **jsonable(metrics)})
         self.n_records += 1
 
+    def log_spans(self, spans: list[dict]) -> None:
+        for s in spans:
+            self._write({"kind": "span", **jsonable(s)})
+
     def _write(self, obj: dict) -> None:
         self._fh.write(json.dumps(obj) + "\n")
         self._fh.flush()
@@ -150,6 +170,10 @@ class CompositeTracker(Tracker):
     def log_metrics(self, metrics: dict, *, step: int) -> None:
         for t in self.trackers:
             t.log_metrics(metrics, step=step)
+
+    def log_spans(self, spans: list[dict]) -> None:
+        for t in self.trackers:
+            t.log_spans(spans)
 
     def finish(self) -> None:
         for t in self.trackers:
@@ -179,6 +203,39 @@ DELTA_KEYS = (
     "prefix_hit_tokens",
     "expert_tokens",
 )
+
+# SchedulerStats fields that are deliberately NOT replayed as deltas:
+# round counts are the record count itself, ttfts ride their own list,
+# util samples / peaks / wall decode time are gauges or derived values.
+# Everything else on SchedulerStats MUST be in DELTA_KEYS — see
+# ``delta_coverage_gaps`` (the drift guard that makes a new counter
+# field a named test failure instead of a silent replay mismatch, the
+# way ``expert_tokens`` nearly slipped through in PR 7).
+NON_DELTA_STATS_FIELDS = frozenset(
+    {
+        "rounds",
+        "ttfts",
+        "util_samples",
+        "util_samples_any",
+        "shared_blocks_peak",
+        "decode_time",
+    }
+)
+
+
+def delta_coverage_gaps(stats_cls=None) -> list[str]:
+    """Names of ``SchedulerStats`` fields covered by neither DELTA_KEYS
+    nor the declared non-delta exemptions. Non-empty means a stats field
+    was added without extending the replay contract."""
+    import dataclasses
+
+    if stats_cls is None:
+        from repro.runtime.scheduler import SchedulerStats as stats_cls
+    return [
+        f.name
+        for f in dataclasses.fields(stats_cls)
+        if f.name not in DELTA_KEYS and f.name not in NON_DELTA_STATS_FIELDS
+    ]
 
 
 def replay_summary(records: list[dict], engine: int | None = None) -> dict:

@@ -20,6 +20,7 @@ from repro.runtime.tracker import (
     JsonlTracker,
     MemoryTracker,
     NullTracker,
+    delta_coverage_gaps,
     read_jsonl,
     replay_summary,
 )
@@ -68,6 +69,71 @@ def test_jsonl_tracker_roundtrip(tmp_path):
     t2.log_metrics({"round": 3}, step=3)
     t2.finish()
     assert len(read_jsonl(path)) == 4
+
+
+def test_composite_finish_and_spans_fan_out(tmp_path):
+    """``finish`` must reach every backend (a composite that leaves a
+    JSONL file open loses its tail on interpreter exit), and span
+    batches fan out like metrics do."""
+    a = JsonlTracker(tmp_path / "a.jsonl")
+    b = JsonlTracker(tmp_path / "b.jsonl")
+    mem = MemoryTracker()
+    comp = CompositeTracker(a, mem, b)
+    comp.log_spans([{"rid": 1, "phase": "queue", "t0": 0.0, "t1": 1.0}])
+    comp.finish()
+    assert a._fh.closed and b._fh.closed
+    for path in (a.path, b.path):
+        recs = read_jsonl(path)
+        assert [r["kind"] for r in recs] == ["span"]
+        assert recs[0]["phase"] == "queue"
+    assert mem.spans[0]["kind"] == "span"
+
+
+# ---------------- replay-contract drift guard ----------------
+
+
+def test_delta_keys_cover_scheduler_stats():
+    """Every ``SchedulerStats`` counter must be in DELTA_KEYS or the
+    declared non-delta set — a new stats field fails here *by name*
+    instead of silently breaking replay conservation."""
+    assert delta_coverage_gaps() == []
+
+
+def test_delta_coverage_gap_names_the_new_field():
+    import dataclasses
+
+    from repro.runtime.scheduler import SchedulerStats
+
+    @dataclasses.dataclass
+    class Grown(SchedulerStats):
+        brand_new_counter: int = 0
+
+    assert delta_coverage_gaps(Grown) == ["brand_new_counter"]
+
+
+def test_replay_summary_filters_interleaved_engines():
+    """Engine filtering over a stream whose engine ids interleave round
+    by round (the shared-tracker fleet shape), with span records mixed
+    in — spans must not perturb the metrics replay."""
+    recs = []
+    for rnd in range(3):
+        for eng in (0, 1):
+            recs.append({
+                "kind": "metrics", "engine": eng, "round": rnd,
+                "generated_tokens": eng + 1, "ttfts": [float(rnd)],
+            })
+        recs.append({
+            "kind": "span", "rid": rnd, "phase": "queue",
+            "t0": 0.0, "t1": 1.0, "engine": rnd % 2,
+        })
+    r0 = replay_summary(recs, engine=0)
+    r1 = replay_summary(recs, engine=1)
+    assert (r0["rounds"], r1["rounds"]) == (3, 3)
+    assert (r0["generated_tokens"], r1["generated_tokens"]) == (3, 6)
+    assert r0["ttfts"] == r1["ttfts"] == [0.0, 1.0, 2.0]
+    unfiltered = replay_summary(recs)
+    assert unfiltered["rounds"] == 6
+    assert unfiltered["generated_tokens"] == 9
 
 
 def test_composite_fans_out_and_null_discards():
@@ -139,6 +205,32 @@ def test_drained_work_lands_in_next_record(setup):
     for k in DELTA_KEYS:
         assert rep[k] == getattr(st, k), k  # pre-drain chunk included
     assert mem.records[-1]["pool_free_blocks"] == sched.pool.free_blocks
+
+
+def test_jsonl_append_survives_drain_restore_cycles(setup, tmp_path):
+    """A JSONL stream reopened mid-life (process restart between a
+    drain and the requeue) appends rather than truncates, and the
+    stitched stream still replays to the live totals."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    path = tmp_path / "serve.jsonl"
+    sched = _sched(cfg, params, JsonlTracker(path), token_budget=8)
+    long_p = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+    sched.submit(long_p, GEN)
+    sched._admit_one()  # first chunk prefilled mid-flight
+    moved = sched.drain()
+    assert [r.rid for r in moved] == [0]
+    sched.tracker.finish()
+    sched.tracker = JsonlTracker(path)  # reopened: append mode
+    sched.submit(long_p, GEN, rid=0)
+    sched.run()
+    sched.tracker.finish()
+    recs = read_jsonl(path)
+    rep = replay_summary(recs)
+    st = sched.stats
+    for k in DELTA_KEYS:
+        assert rep[k] == getattr(st, k), k
+    assert rep["rounds"] == st.rounds
 
 
 # ---------------- fleet stream ----------------
