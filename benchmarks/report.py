@@ -219,6 +219,40 @@ def moe_table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def mem_table(recs: list[dict]) -> str:
+    """Owner-attributed memory story from a tracker stream carrying the
+    ``kind="mem"`` ledger records: per engine, the pool peak (and who
+    held it — live requests vs prefix cache), the eviction and COW churn
+    behind it, total allocation traffic, and the static VMEM
+    reservations (pinned weight blocks, expert stream ring)."""
+    from repro.runtime.memledger import summarize_ledger
+
+    s = summarize_ledger(recs)
+    if not s["engines"]:
+        return "(no mem records in stream)"
+    lines = [
+        "| engine | peak occ | held@peak | cached@peak | evictable@peak | shared@peak | evicted | COW | alloc MiB | reserved |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for e in s["engines"]:
+        res = e.get("reserved_bytes", {})
+        res_cell = ", ".join(
+            f"{k}:{fmt_bytes(v)}" for k, v in sorted(res.items())
+        ) or "—"
+        lines.append(
+            "| {eng} | {occ:.1%} | {held}/{nb} | {cached} | {ev} | {sh} | "
+            "{evd} | {cow} | {mib:.2f} | {res} |".format(
+                eng="—" if e["engine"] is None else e["engine"],
+                occ=e["peak_occupancy"], held=e["peak_held_blocks"],
+                nb=e["n_blocks"], cached=e["peak_cached_blocks"],
+                ev=e["peak_evictable_blocks"], sh=e["peak_shared_blocks"],
+                evd=e["evicted_blocks"], cow=e["cow_copies"],
+                mib=e["alloc_mib"], res=res_cell,
+            )
+        )
+    return "\n".join(lines)
+
+
 def spans_table(recs: list[dict]) -> str:
     """Critical-path attribution from a span stream (a JsonlTracker
     trace with ``--trace-spans``): requests bucketed by submit-relative
@@ -338,6 +372,8 @@ if __name__ == "__main__":
         print(moe_table(load(path)))
     elif which == "spans":
         print(spans_table(load(path)))
+    elif which == "mem":
+        print(mem_table(load(path)))
     elif which == "roofline":
         print(roofline_table(load(path)))
     else:

@@ -38,6 +38,11 @@ phase end:
     tokens handed back (token conservation);
   * replaying the emitted JSONL stream (``tracker.replay_summary``)
     reproduces every engine's live summary counters exactly;
+  * integrating the memory ledger's ``kind="mem"`` deltas over the
+    *whole* stream (``memledger.validate_ledger``) reproduces every
+    round's pool gauges byte-exactly — all three phases, the mid-burst
+    drain/restore churn, and the engine-id reuse across phase
+    boundaries included;
   * the lifecycle spans in the same stream decompose *exactly*
     (``spans.validate_trace``): every completed request's phase spans
     tile [submit, done] with zero gaps, and its admit/first stamps sit
@@ -419,6 +424,52 @@ def run_soak(
         errors.extend(_span_check(moe_records, "moe spans"))
     tracker.finish()
 
+    # the memory-ledger conservation law, probed over the WHOLE stream:
+    # integrating the kind="mem" deltas must land exactly on every
+    # round's pool gauges, across all three phases, the mid-burst
+    # drain/restore churn, and the engine-id reuse at phase boundaries
+    # (each phase's attach records reset the integration)
+    mem_records = 0
+    kv_occupancy_p95 = cached_fraction_p50 = streamed_mib_per_vs = 0.0
+    if trace_out:
+        from repro.runtime.memledger import validate_ledger
+
+        stream = read_jsonl(trace_out)
+        mem_records = sum(1 for r in stream if r.get("kind") == "mem")
+        errors.extend(f"mem ledger: {e}" for e in validate_ledger(stream))
+        occ, cached = [], []
+        n_blocks: dict = {}  # per engine, from the attach records
+        streamed: dict = {}  # engine -> [first (t, cum), last (t, cum)]
+        for r in stream:
+            kind = r.get("kind", "metrics")
+            if kind == "mem" and r.get("op") == "attach":
+                n_blocks[r.get("engine")] = int(r["n_blocks"])
+            if kind != "metrics":
+                continue
+            if "pool_occupancy" in r:
+                occ.append(float(r["pool_occupancy"]))
+            nb = n_blocks.get(r.get("engine"))
+            if nb and "pool_cached_blocks" in r:
+                cached.append(r["pool_cached_blocks"] / nb)
+            if "residency_streamed_mib" in r and "clock_s" in r:
+                pair = (
+                    float(r["clock_s"]),
+                    float(r["residency_streamed_mib"]),
+                )
+                streamed.setdefault(r.get("engine"), [pair, pair])[1] = pair
+        if occ:
+            kv_occupancy_p95 = round(float(np.percentile(occ, 95)), 4)
+        if cached:
+            cached_fraction_p50 = round(
+                float(np.percentile(cached, 50)), 4
+            )
+        mib = dt = 0.0
+        for (ta, ca), (tb, cb) in streamed.values():
+            mib += cb - ca
+            dt += tb - ta
+        if dt > 0:
+            streamed_mib_per_vs = round(mib / dt, 6)
+
     assert math.isfinite(clock_h)
     return {
         "virtual_hours": round(clock_h, 3),
@@ -450,6 +501,10 @@ def run_soak(
             )
             if trace_out else 0
         ),
+        "mem_records": mem_records,
+        "kv_occupancy_p95": kv_occupancy_p95,
+        "cached_fraction_p50": cached_fraction_p50,
+        "streamed_mib_per_vs": streamed_mib_per_vs,
         "ttft_p95_s": round(slo.ttft_p95, 3),
         "tpot_p95_s": round(slo.tpot_p95, 3),
         "queue_wait_p95_s": round(slo.queue_wait_p95, 6),
@@ -495,6 +550,8 @@ def check(rows: list[dict]) -> list[str]:
             errs.append("no generated-token prefix reuse observed")
         if r.get("moe_requests") and r.get("moe_expert_tokens", 0) == 0:
             errs.append("moe burst recorded no expert-routed tokens")
+        if r.get("trace_records") and r.get("mem_records", 0) == 0:
+            errs.append("trace stream carries no kind='mem' records")
     return errs
 
 

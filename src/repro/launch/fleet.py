@@ -227,6 +227,19 @@ def main(argv=None) -> int:
             f"observed, {ss.get('violations', 0)} violations"
             + (f", burn rates [{burns}]" if burns else "")
         )
+    ms = result.mem_summary
+    if ms:
+        print(
+            f"[fleet/mem] signal {ms['signal']}, peak occupancy "
+            f"{ms['peak_occupancy']*100:.1f}%, min headroom "
+            f"{ms['headroom_blocks']} blocks, {ms['evicted_blocks']} "
+            f"blocks evicted fleet-wide"
+            + (
+                f", pressure on engines {ms['pressure_engines']}"
+                if ms.get("pressure_engines")
+                else ""
+            )
+        )
     for s in result.engine_summaries:
         line = (
             f"[fleet]   engine {s['engine']} ({s['role']}): "
@@ -241,6 +254,15 @@ def main(argv=None) -> int:
                 f"{s['shared_blocks_peak']} shared blocks peak, "
                 f"{s['cached_blocks']} cached)"
             )
+        mem = s.get("mem") or {}
+        if mem:
+            # peak snapshot: the drain-time report sees an empty pool
+            frag = mem.get("frag_at_peak") or s.get("fragmentation") or {}
+            line += (
+                f", mem peak {mem['peak_occupancy']*100:.0f}% occ "
+                f"({mem['evicted_blocks']} evicted, packing "
+                f"{frag.get('baseline_efficiency', 1.0)*100:.0f}%)"
+            )
         print(line)
     if args.json:
         payload = {
@@ -251,6 +273,7 @@ def main(argv=None) -> int:
             "report": r,
             "engine_summaries": result.engine_summaries,
             "slo_summary": result.slo_summary,
+            "mem_summary": result.mem_summary,
         }
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)

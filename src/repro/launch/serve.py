@@ -93,6 +93,12 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
             from repro.runtime.spans import SpanRecorder
 
             spans = SpanRecorder(time.monotonic, tracker=tracker)
+    from repro.runtime.memledger import MemLedger, MemPressureMonitor
+
+    # no engine stamp: standalone round records carry none either, and
+    # the ledger/metrics engine keys must agree for validate_ledger
+    ledger = MemLedger(time.monotonic, tracker=tracker)
+    mem_monitor = MemPressureMonitor()
     return Scheduler(
         cfg,
         params,
@@ -112,6 +118,8 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
         prefix_cache=prefix_cache,
         tracker=tracker,
         spans=spans,
+        ledger=ledger,
+        mem_monitor=mem_monitor,
     )
 
 
@@ -154,6 +162,9 @@ def run_pool_engine(cfg, params, args) -> dict:
             sched.residency.summary() if sched.residency is not None else None
         ),
         "span_records": sched.spans.n_spans if sched.spans else 0,
+        "mem": sched.mem_monitor.summary(now=time.monotonic()),
+        "mem_records": sched.ledger.n_records,
+        "fragmentation": sched.pool.fragmentation_report(),
         "outputs": outputs,
     }
 
@@ -375,6 +386,23 @@ def main(argv=None) -> int:
             f"traffic cut {r['hbm_traffic_reduction']*100:.0f}%, "
             f"stream-ahead depth {r['stream_ahead']} (R_F)"
         )
+    if m.get("mem"):
+        mm = m["mem"]
+        frag = mm.get("frag_at_peak") or {}  # drain-time report is empty
+        line = (
+            f"[serve/mem] signal {mm['signal']}, peak occupancy "
+            f"{mm['peak_occupancy']*100:.1f}% "
+            f"({mm['peak_held_blocks']} blocks, headroom "
+            f"{mm['headroom_blocks']}), {mm['evicted_blocks']} blocks "
+            f"evicted, {m['mem_records']} ledger records"
+        )
+        if frag:
+            line += (
+                f", packing at peak "
+                f"{frag.get('baseline_efficiency', 1.0)*100:.1f}% "
+                f"(FFD bound {frag.get('ffd_efficiency', 1.0)*100:.1f}%)"
+            )
+        print(line)
     return 0
 
 

@@ -14,7 +14,11 @@ https://ui.perfetto.dev and ``chrome://tracing`` open natively:
     span, and a drain/requeue connects the aborted span to the
     request's next queue span on the new engine,
   * counter ("C") tracks per engine from the round records' gauges
-    (pool utilization, queue depth, active lanes).
+    (pool utilization/occupancy, cached and shared blocks, queue depth,
+    active lanes, streamed HBM MiB/s from the cumulative residency
+    gauge) and from the memory ledger's ``kind="mem"`` reserve records
+    (VMEM-resident bytes: weights pinned by the residency plan plus the
+    expert stream ring).
 
 Timestamps are microseconds (the trace_event unit); the virtual clock's
 nanosecond rounding survives exactly. ``validate_trace_events`` checks
@@ -131,12 +135,33 @@ def to_trace_events(records: Iterable[dict]) -> dict:
             )
 
     # engine gauges from the round records as counter tracks
+    counter_keys = (
+        "pool_utilization",
+        "pool_occupancy",
+        "pool_cached_blocks",
+        "pool_shared_blocks",
+        "queued",
+        "active",
+    )
+    streamed_prev: dict[int, tuple[float, float]] = {}  # pid -> (t, cum)
+    # standalone round records carry no clock_s; the ledger flushes its
+    # mem records (monotonic-stamped) right before each one, so the last
+    # mem timestamp per engine is the round's counter timestamp
+    last_mem_t: dict[int, float] = {}
     for r in records:
-        if r.get("kind", "metrics") != "metrics" or "clock_s" not in r:
+        kind = r.get("kind", "metrics")
+        if kind == "mem" and "t" in r:
+            last_mem_t[int(r.get("engine") or 0)] = float(r["t"])
+            continue
+        if kind != "metrics":
             continue
         pid = int(r.get("engine", 0))
-        ts = r["clock_s"] * _US
-        for key in ("pool_utilization", "queued", "active"):
+        t = r.get("clock_s", last_mem_t.get(pid))
+        if t is None:
+            continue
+        t = float(t)
+        ts = t * _US
+        for key in counter_keys:
             if key in r:
                 events.append(
                     {
@@ -147,6 +172,42 @@ def to_trace_events(records: Iterable[dict]) -> dict:
                         "args": {key: r[key]},
                     }
                 )
+        # streamed HBM bandwidth: the gauge is cumulative MiB, so the
+        # rate is its per-round difference over the virtual clock
+        if "residency_streamed_mib" in r:
+            cum = float(r["residency_streamed_mib"])
+            prev = streamed_prev.get(pid)
+            rate = 0.0
+            if prev is not None and t > prev[0]:
+                rate = max(0.0, (cum - prev[1]) / (t - prev[0]))
+            streamed_prev[pid] = (t, cum)
+            events.append(
+                {
+                    "ph": "C",
+                    "name": "streamed_hbm_mib_per_s",
+                    "pid": pid,
+                    "ts": ts,
+                    "args": {"streamed_hbm_mib_per_s": round(rate, 3)},
+                }
+            )
+
+    # VMEM-resident bytes: integrate the ledger's static reservations
+    # (weight-resident plan + expert stream ring) per engine
+    vmem: dict[int, int] = {}
+    for r in records:
+        if r.get("kind") != "mem" or r.get("op") != "reserve":
+            continue
+        pid = int(r.get("engine") or 0)
+        vmem[pid] = vmem.get(pid, 0) + int(r.get("nbytes", 0))
+        events.append(
+            {
+                "ph": "C",
+                "name": "vmem_resident_bytes",
+                "pid": pid,
+                "ts": float(r.get("t", 0.0)) * _US,
+                "args": {"vmem_resident_bytes": vmem[pid]},
+            }
+        )
 
     events.sort(key=lambda e: (e.get("ts", 0.0), e.get("pid", 0)))
     return {"traceEvents": events, "displayTimeUnit": "ms"}
@@ -178,6 +239,12 @@ def validate_trace_events(doc: dict) -> list[str]:
             dur = e.get("dur")
             if not isinstance(dur, (int, float)) or dur < 0:
                 errors.append(f"{where}: X event needs dur >= 0, got {dur!r}")
+        if ph == "C":
+            args = e.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(f"{where}: C event needs non-empty args")
+            elif not all(isinstance(v, (int, float)) for v in args.values()):
+                errors.append(f"{where}: C event args must be numeric")
         if ph in ("s", "f"):
             if "id" not in e:
                 errors.append(f"{where}: flow event needs an id")
@@ -220,12 +287,25 @@ def main(argv=None) -> int:
     out.write_text(json.dumps(doc) + "\n")
     n_spans = sum(1 for e in doc["traceEvents"] if e["ph"] == "X")
     n_flows = sum(1 for e in doc["traceEvents"] if e["ph"] == "s")
+    n_counters = sum(1 for e in doc["traceEvents"] if e["ph"] == "C")
     print(
         f"{out}: {len(doc['traceEvents'])} events "
-        f"({n_spans} spans, {n_flows} flows)"
+        f"({n_spans} spans, {n_flows} flows, {n_counters} counters)"
     )
     if args.check:
         errors = validate_trace_events(doc)
+        # a stream with timestampable round records must yield counter
+        # tracks — a silent counter regression would strand the memory
+        # telemetry (metrics records are timestamped by clock_s or by
+        # the mem records flushed just before them)
+        has_mem = any(r.get("kind") == "mem" for r in records)
+        has_rounds = any(
+            r.get("kind", "metrics") == "metrics"
+            and ("clock_s" in r or has_mem)
+            for r in records
+        )
+        if has_rounds and n_counters == 0:
+            errors.append("metrics records present but no counter events")
         for err in errors:
             print(f"INVALID: {err}")
         if errors:

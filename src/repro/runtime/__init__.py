@@ -1,4 +1,11 @@
 from repro.runtime.kv_pool import KVPool  # noqa: F401
+from repro.runtime.memledger import (  # noqa: F401
+    MemLedger,
+    MemPolicy,
+    MemPressureMonitor,
+    summarize_ledger,
+    validate_ledger,
+)
 from repro.runtime.scheduler import (  # noqa: F401
     PrefillHandoff,
     Request,

@@ -18,6 +18,7 @@ from repro.runtime.cluster.disagg import (
 )
 from repro.runtime.cluster.engine import Engine, StepCostModel
 from repro.runtime.cluster.router import FleetCluster, FleetRunResult, Router
+from repro.runtime.memledger import MemLedger, MemPolicy, MemPressureMonitor
 from repro.runtime.spans import SLOMonitor, SpanRecorder, VirtualClock
 from repro.runtime.cluster.traffic import (
     ClientRequest,
@@ -35,6 +36,9 @@ __all__ = [
     "Engine",
     "FleetCluster",
     "FleetRunResult",
+    "MemLedger",
+    "MemPolicy",
+    "MemPressureMonitor",
     "RequestTiming",
     "RoleRates",
     "Router",

@@ -125,6 +125,7 @@ class DisaggCluster(FleetCluster):
         tracker=None,
         trace_spans: bool = True,
         slo=None,
+        mem_policy=None,
     ):
         # hybrids now disaggregate too: the PrefillHandoff payload carries
         # the SSM lane-state snapshot next to the KV-block rows
@@ -161,6 +162,7 @@ class DisaggCluster(FleetCluster):
             tracker=tracker,
             trace_spans=trace_spans,
             slo=slo,
+            mem_policy=mem_policy,
         )
         self.prefill_engines = [mk(i, "prefill") for i in range(n_p)]
         self.decode_engines = [mk(n_p + i, "decode") for i in range(n_d)]

@@ -119,6 +119,7 @@ class Engine:
         tracker=None,
         trace_spans: bool = True,
         slo=None,
+        mem_policy=None,
     ):
         assert role in ("both", "prefill", "decode"), role
         self.engine_id = engine_id
@@ -149,6 +150,19 @@ class Engine:
             from repro.runtime.prefix_cache import PrefixCache
 
             cache = PrefixCache(pool)
+        # memory counterpart of the span recorder: the ledger emits
+        # kind="mem" pool-mutation deltas on the same virtual clock and
+        # tracker stream; the pressure monitor turns the per-round gauges
+        # into the elastic-fleet admission/scale signal
+        from repro.runtime.memledger import MemLedger, MemPressureMonitor
+
+        self.ledger = MemLedger(
+            self._vclock.now,
+            tracker=tracker,
+            engine=engine_id,
+            role=role,
+        )
+        self.mem_monitor = MemPressureMonitor(mem_policy)
         self.scheduler = Scheduler(
             cfg,
             params,
@@ -160,6 +174,8 @@ class Engine:
             handoff=self._on_handoff if role == "prefill" else None,
             prefix_cache=cache,
             spans=self.spans,
+            ledger=self.ledger,
+            mem_monitor=self.mem_monitor,
         )
         # incremental virtual-time charging: every prefill/decode step
         # advances the clock as it runs, so span boundaries and the
@@ -413,4 +429,6 @@ class Engine:
             "pool_utilization": round(s.steady_state_utilization, 4),
             "spans": self.spans.n_spans,
             "slo": self.slo_monitor.summary(now=self.clock),
+            "mem": self.mem_monitor.summary(now=self.clock),
+            "fragmentation": self.scheduler.pool.fragmentation_report(),
         }

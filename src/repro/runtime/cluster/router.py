@@ -177,6 +177,10 @@ class FleetRunResult:
     # fleet-level SLOMonitor.summary(): streaming TTFT/TPOT/queue-wait
     # histograms + multi-window burn rates (empty without completions)
     slo_summary: dict = dataclasses.field(default_factory=dict)
+    # fleet-level memory-pressure view (memledger.MemPressureMonitor):
+    # worst per-engine signal, peak occupancy, eviction churn — the
+    # admission/scale input for the ROADMAP elastic-fleet item
+    mem_summary: dict = dataclasses.field(default_factory=dict)
 
     def report(self, slo: SloPolicy) -> SloReport:
         return slo_report(self.timings, slo)
@@ -202,6 +206,7 @@ class FleetCluster:
         tracker=None,
         trace_spans: bool = True,
         slo: SloPolicy | None = None,
+        mem_policy=None,
     ):
         self.cfg = cfg
         self.tracker = tracker
@@ -222,6 +227,7 @@ class FleetCluster:
                 tracker=tracker,
                 trace_spans=trace_spans,
                 slo=slo,
+                mem_policy=mem_policy,
             )
             for i in range(n_engines)
         ]
@@ -350,6 +356,10 @@ class FleetCluster:
         for e in self.engines:
             e.scheduler.pool.validate()
             e.spans.flush()  # drained engines may hold buffered aborts
+            # a drain after the last emitted round leaves release records
+            # buffered; sync + flush keeps the mem stream complete
+            e.ledger.sync()
+            e.ledger.flush()
             for rid, req in e.scheduler.requests.items():
                 if req.state is RequestState.HANDOFF:
                     continue  # finished on a decode engine
@@ -361,10 +371,35 @@ class FleetCluster:
         for rid, timing in self.timings.items():
             timing.n_tokens = len(outputs.get(rid, ()))
         clock = max((e.clock for e in self.engines), default=0.0)
+        mems = {
+            e.engine_id: e.mem_monitor.summary(now=e.clock)
+            for e in self.engines
+        }
+        sig_rank = {"ok": 0, "pressure": 1, "storm": 2}
+        mem_summary = {
+            "peak_occupancy": max(
+                (m["peak_occupancy"] for m in mems.values()), default=0.0
+            ),
+            "evicted_blocks": sum(m["evicted_blocks"] for m in mems.values()),
+            "headroom_blocks": min(
+                (m["headroom_blocks"] for m in mems.values()), default=0
+            ),
+            "signal": max(
+                (m.get("signal", "ok") for m in mems.values()),
+                key=lambda s: sig_rank.get(s, 0),
+                default="ok",
+            ),
+            "pressure_engines": sorted(
+                eid
+                for eid, m in mems.items()
+                if m.get("signal", "ok") != "ok"
+            ),
+        }
         return FleetRunResult(
             outputs=outputs,
             timings=self.timings,
             engine_summaries=[e.summary() for e in self.engines],
             assignments=dict(self.router.assignments),
             slo_summary=self.slo_monitor.summary(now=clock),
+            mem_summary=mem_summary,
         )

@@ -210,6 +210,10 @@ class KVPool:
         self.alloc_blocks = 0
         self.freed_blocks = 0
         self.cow_copies = 0
+        # the attached memory ledger (runtime.memledger.MemLedger.attach);
+        # every mutation below notifies it so integrated deltas reproduce
+        # stats() exactly at any point between mutations
+        self.ledger = None
 
     @classmethod
     def for_slots(
@@ -318,6 +322,10 @@ class KVPool:
         self._committed[rid] = self.blocks_for(total_tokens)
         self._held[rid] = []
         self._tokens[rid] = 0
+        if self.ledger is not None:
+            self.ledger.record(
+                "admit", owner="request", rid=rid, committed=self._committed[rid]
+            )
 
     def _pop_free(self) -> int:
         """Take a block off the free list, evicting cached blocks first
@@ -335,6 +343,7 @@ class KVPool:
     def ensure_rows(self, rid: int, n_tokens: int) -> None:
         """Grow the request's block list to hold ``n_tokens`` rows."""
         held = self._held[rid]
+        before = len(held)
         while len(held) * self.block_tokens < n_tokens:
             if len(held) >= self._committed[rid]:
                 raise RuntimeError(
@@ -344,6 +353,13 @@ class KVPool:
             b = self._pop_free()
             self._add_user(b)
             held.append(b)
+        # note_tokens-driven row-coverage drift deliberately does not
+        # emit (it would flood one record per decode token); the ledger's
+        # round sync() folds it in. Block growth is an event.
+        if self.ledger is not None and len(held) > before:
+            self.ledger.record(
+                "grow", owner="request", rid=rid, grown=len(held) - before
+            )
 
     def note_tokens(self, rid: int, n_tokens: int) -> None:
         """Record the request's token count (monotone while held: a
@@ -414,6 +430,14 @@ class KVPool:
             held.append(new)
             self.cow_copies += 1
         self.note_tokens(rid, n_tokens)
+        if self.ledger is not None:
+            self.ledger.record(
+                "adopt_prefix",
+                owner="request",
+                rid=rid,
+                shared=len(shared),
+                cow=int(tail_block is not None),
+            )
 
     def release(self, rid: int) -> None:
         if rid not in self._held:
@@ -430,6 +454,8 @@ class KVPool:
                 self._free.append(b)
                 self.freed_blocks += 1
         del self._tokens[rid], self._committed[rid]
+        if self.ledger is not None:
+            self.ledger.record("release", owner="request", rid=rid)
 
     # ---------------- prefix-cache pinning ----------------
 
@@ -441,6 +467,8 @@ class KVPool:
             raise ValueError(f"block {block} already cached")
         self._cached.add(block)
         self._refs[block] += 1
+        if self.ledger is not None:
+            self.ledger.record("retain_cached", owner="prefix-cache", block=block)
 
     def uncache(self, block: int) -> int:
         """Drop the cache's pin; returns 1 if the block went free, else 0.
@@ -452,13 +480,16 @@ class KVPool:
             raise ValueError(f"block {block} is not cached")
         self._cached.remove(block)
         self._refs[block] -= 1
+        freed = 0
         if self._refs[block] == 0:
             del self._refs[block]
             self._free.append(block)
             self._evictable -= 1  # it was cache-only; now it is free
             self.freed_blocks += 1
-            return 1
-        return 0
+            freed = 1
+        if self.ledger is not None:
+            self.ledger.record("uncache", owner="prefix-cache", block=block)
+        return freed
 
     # ---------------- introspection ----------------
 

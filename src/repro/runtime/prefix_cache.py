@@ -344,6 +344,13 @@ class PrefixCache:
                             heap, (a.stamp, seq := seq + 1, exposed, a)
                         )
         self.evicted_blocks += freed
+        # the per-block frees already emitted through pool.uncache; this
+        # zero-delta summary attributes the storm (requested vs freed) so
+        # report.py/mem and the pressure monitor can count churn episodes
+        if self.pool.ledger is not None and freed:
+            self.pool.ledger.record(
+                "evict", owner="prefix-cache", requested=n_blocks, freed=freed
+            )
         return freed
 
     # ---------------- reporting ----------------

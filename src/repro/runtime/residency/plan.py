@@ -223,6 +223,23 @@ class RuntimeResidencyPlan:
             1.0, self.streamable_bytes_per_step
         )
 
+    @property
+    def ring_bytes(self) -> int:
+        """VMEM held by the prefetch ring: ``stream_ahead`` slots, each
+        sized for the largest streamed block (the ring is a fixed-shape
+        double-plus buffer, so every slot pays the worst case). The
+        memory ledger reports this as the ``ring-slot`` owner."""
+        res = self.block_resident()
+        slot = max(
+            (
+                b.padded_bytes(self._chip)
+                for b in self.blocks
+                if not res[b.name]
+            ),
+            default=0,
+        )
+        return int(self.stream_ahead * slot)
+
     def layer_stream_mask(self, cfg: ModelConfig) -> tuple[bool, ...]:
         """Per-layer 'FFN is streamed' flags for the executor: a layer
         only runs resident if *all* of its FFN mats are pinned (the

@@ -213,6 +213,8 @@ class Scheduler:
         prefix_cache=None,
         tracker=None,
         spans=None,
+        ledger=None,
+        mem_monitor=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -330,22 +332,45 @@ class Scheduler:
         # open decode slices: rid -> [t_slice_start, steps] for the
         # contiguous decode steps a lane ran this round (one span each)
         self._decode_open: dict[int, list] = {}
-        if tracker is not None:
-            tracker.log_hyperparameters(
-                {
-                    "surface": "scheduler",
-                    "arch": cfg.name,
-                    "family": cfg.family,
-                    "slots": slots,
-                    "max_len": max_len,
-                    "token_budget": self.token_budget,
-                    "decode_per_round": self.decode_per_round,
-                    "prefill_chunk": self.prefill_chunk,
-                    "block_tokens": pool.block_tokens,
-                    "pool_blocks": pool.usable_blocks,
-                    "prefix_cache": prefix_cache is not None,
-                }
+        # event-sourced memory ledger (runtime.memledger.MemLedger):
+        # every pool mutation emits a kind="mem" delta record; the round
+        # emission syncs + flushes it *before* the gauge record so
+        # integrated deltas equal the gauges at every round boundary
+        self.ledger = ledger
+        if ledger is not None and ledger.pool is None:
+            ledger.attach(pool)
+        # streaming pressure signal (runtime.memledger.MemPressureMonitor)
+        # fed once per round — the elastic-fleet admission/scale input
+        self.mem_monitor = mem_monitor
+        if ledger is not None and residency is not None:
+            # static owners: the weight-resident VMEM set and the expert
+            # stream ring buffer, so byte attribution covers the whole
+            # accelerator budget rather than just the KV pool
+            ledger.reserve(
+                "weight-resident",
+                residency.resident_bytes,
+                blocks=residency.resident_block_count,
             )
+            ledger.reserve(
+                "ring-slot", residency.ring_bytes, depth=residency.stream_ahead
+            )
+        if tracker is not None:
+            hp = {
+                "surface": "scheduler",
+                "arch": cfg.name,
+                "family": cfg.family,
+                "slots": slots,
+                "max_len": max_len,
+                "token_budget": self.token_budget,
+                "decode_per_round": self.decode_per_round,
+                "prefill_chunk": self.prefill_chunk,
+                "block_tokens": pool.block_tokens,
+                "pool_blocks": pool.usable_blocks,
+                "prefix_cache": prefix_cache is not None,
+            }
+            if residency is not None:
+                hp["residency"] = residency.summary()
+            tracker.log_hyperparameters(hp)
 
     # ---------------- submission ----------------
 
@@ -988,6 +1013,20 @@ class Scheduler:
                 self.spans.mark(rid, "decode", ts, t, steps=steps)
             self._decode_open.clear()
         self.stats.rounds += 1
+        if self.mem_monitor is not None:
+            self.mem_monitor.observe(
+                t=(
+                    self.spans.now()
+                    if self.spans is not None
+                    else float(self.stats.rounds)
+                ),
+                pool=self.pool,
+                evicted_blocks=(
+                    self.prefix_cache.evicted_blocks
+                    if self.prefix_cache is not None
+                    else 0
+                ),
+            )
         if self.tracker is not None or self.on_round is not None:
             self._emit_round()
         if self.spans is not None:
@@ -1004,6 +1043,15 @@ class Scheduler:
         the next record and replaying the stream reproduces the totals
         exactly."""
         s = self.stats
+        # mem-ledger barrier: fold un-evented note_tokens drift into one
+        # sync record and flush the buffer *now*, before the gauge record
+        # below is built (and possibly deferred through on_round) — every
+        # mem record therefore precedes, on the stream, the metrics
+        # record its deltas must integrate to (validate_ledger's exactness
+        # contract at round granularity).
+        if self.ledger is not None:
+            self.ledger.sync()
+            self.ledger.flush()
         rec: dict = {"round": s.rounds}
         # the delta set is the tracker's replay contract (DELTA_KEYS):
         # one source of truth, drift-guarded by delta_coverage_gaps
@@ -1023,8 +1071,11 @@ class Scheduler:
         p = self.pool.stats()
         rec.update(
             pool_utilization=round(p.utilization, 4),
+            pool_occupancy=round(p.occupancy, 4),
             pool_free_blocks=p.free_blocks,
             pool_held_blocks=p.held_blocks,
+            pool_held_tokens=p.held_tokens,
+            pool_committed_blocks=p.committed_blocks,
             pool_shared_blocks=p.shared_blocks,
             pool_cached_blocks=p.cached_blocks,
             pool_evictable_blocks=p.evictable_blocks,
@@ -1032,6 +1083,24 @@ class Scheduler:
             pool_freed_blocks=self.pool.freed_blocks,
             pool_cow_copies=self.pool.cow_copies,
         )
+        if self.residency is not None:
+            # live residency gauges (satellite of ISSUE 9): what the
+            # startup print used to say once, per round — plus the
+            # cumulative streamed-traffic integral the Perfetto export
+            # differentiates into an HBM MiB/s counter track
+            rp = self.residency
+            rec.update(
+                residency_resident_bytes=int(rp.resident_bytes),
+                residency_streamed_bytes_per_step=round(
+                    rp.streamed_bytes_per_step, 3
+                ),
+                residency_hbm_traffic_reduction=round(
+                    rp.hbm_traffic_reduction, 4
+                ),
+                residency_streamed_mib=round(
+                    s.decode_steps * rp.streamed_bytes_per_step / 2**20, 6
+                ),
+            )
         if self.prefix_cache is not None:
             c = self.prefix_cache.stats()
             rec.update(
@@ -1059,6 +1128,18 @@ class Scheduler:
                 rec["moe_hot_expert_fraction"] = round(
                     float(self._expert_counts[hot].sum()) / tot, 4
                 )
+            if self._expert_resident is not None:
+                # live (L, E) stream-mask occupancy: which streamed slots
+                # the routing actually touched so far — a dead streamed
+                # expert is a candidate to swap into the resident set
+                streamed = ~self._expert_resident
+                n_streamed = int(streamed.sum())
+                rec["moe_streamed_experts"] = n_streamed
+                rec["moe_stream_mask_occupancy"] = round(
+                    float((self._expert_counts[streamed] > 0).sum())
+                    / max(1, n_streamed),
+                    4,
+                )
         if self.on_round is not None:
             self.on_round(rec)
         else:
@@ -1078,6 +1159,11 @@ class Scheduler:
                 )
             self.round()
         self.pool.validate()
+        if self.ledger is not None:
+            # releases after the last emitted round would otherwise sit
+            # in the buffer; a trailing sync keeps the stream complete
+            self.ledger.sync()
+            self.ledger.flush()
         return self.stats
 
     def outputs(self) -> dict[int, list[int]]:

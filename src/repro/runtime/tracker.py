@@ -51,6 +51,14 @@ A second record kind, ``kind="span"`` (emitted via ``log_spans`` by
 spans — {rid, phase, t0, t1, engine?, role?, attrs...} — in the same
 stream; ``replay_summary`` ignores them and ``runtime.spans``'s
 ``validate_trace`` checks their exact-decomposition contract.
+
+A third kind, ``kind="mem"`` (emitted via ``log_mem`` by
+``runtime.memledger.MemLedger``), interleaves event-sourced KV-pool
+mutation deltas — {op, owner, t, d_held_blocks, d_bytes, ...} — plus
+``op="attach"`` absolute baselines and ``op="reserve"`` static byte
+reservations (weight-resident VMEM, the expert stream ring).
+``replay_summary`` ignores them; ``runtime.memledger.validate_ledger``
+checks their integration contract against the per-round pool gauges.
 """
 
 from __future__ import annotations
@@ -93,6 +101,11 @@ class Tracker:
         # no-op so pre-span backends keep working unchanged.
         pass
 
+    def log_mem(self, records: list[dict]) -> None:
+        # optional: memory-ledger deltas (runtime.memledger). Default
+        # no-op so pre-ledger backends keep working unchanged.
+        pass
+
     def finish(self) -> None:  # optional flush/close
         pass
 
@@ -114,15 +127,30 @@ class MemoryTracker(Tracker):
         self.hparams: list[dict] = []
         self.records: list[dict] = []
         self.spans: list[dict] = []
+        self.mems: list[dict] = []
+        # every record in arrival order, kind-tagged — in-process tests
+        # validate cross-kind interleaving (mem-before-metrics ordering,
+        # full-stream ledger integration) without a file round-trip
+        self.stream: list[dict] = []
 
     def log_hyperparameters(self, hparams: dict) -> None:
         self.hparams.append(dict(hparams))
+        self.stream.append({"kind": "hparams", **hparams})
 
     def log_metrics(self, metrics: dict, *, step: int) -> None:
-        self.records.append({**metrics, "step": step})
+        rec = {**metrics, "step": step}
+        self.records.append(rec)
+        self.stream.append({"kind": "metrics", **rec})
 
     def log_spans(self, spans: list[dict]) -> None:
-        self.spans.extend({"kind": "span", **s} for s in spans)
+        tagged = [{"kind": "span", **s} for s in spans]
+        self.spans.extend(tagged)
+        self.stream.extend(tagged)
+
+    def log_mem(self, records: list[dict]) -> None:
+        tagged = [{"kind": "mem", **m} for m in records]
+        self.mems.extend(tagged)
+        self.stream.extend(tagged)
 
 
 class JsonlTracker(Tracker):
@@ -149,6 +177,10 @@ class JsonlTracker(Tracker):
         for s in spans:
             self._write({"kind": "span", **jsonable(s)})
 
+    def log_mem(self, records: list[dict]) -> None:
+        for m in records:
+            self._write({"kind": "mem", **jsonable(m)})
+
     def _write(self, obj: dict) -> None:
         self._fh.write(json.dumps(obj) + "\n")
         self._fh.flush()
@@ -174,6 +206,10 @@ class CompositeTracker(Tracker):
     def log_spans(self, spans: list[dict]) -> None:
         for t in self.trackers:
             t.log_spans(spans)
+
+    def log_mem(self, records: list[dict]) -> None:
+        for t in self.trackers:
+            t.log_mem(records)
 
     def finish(self) -> None:
         for t in self.trackers:
