@@ -7,9 +7,11 @@ Four record shapes are understood: dry-run cells, keyed
 ``benchmarks/fleet_bench.py``'s "rows" list, keyed
 (mode, engines, split, quant); ``benchmarks/prefix_bench.py`` rows
 (self-identified via ``"bench": "prefix"``), keyed
-(arch, quant, mode); and ``benchmarks/soak_bench.py`` trajectory
+(arch, quant, mode); ``benchmarks/soak_bench.py`` trajectory
 entries (``"bench": "soak"``), keyed by configuration + run index so
-successive soaks of the same shape replace each other. (A
+successive soaks of the same shape replace each other; and
+``benchmarks/spec_bench.py`` rows / trajectory entries
+(``"bench": "spec"``), keyed by A/B cell + run index. (A
 ``launch.fleet --json`` report is one nested object, not jsonl —
 flatten it via ``report.load_fleet`` first.)
 
@@ -33,6 +35,10 @@ def record_key(r: dict) -> tuple | None:
         return (
             "prefix", r["arch"], r.get("quant", 0), r.get("mode"),
         )
+    if r.get("bench") == "spec":
+        # a speculative-decode A/B row ("cell" names the pairing) or a
+        # spec trajectory entry (no "cell", keyed by run index instead)
+        return ("spec", r.get("cell"), r.get("run_index", 0))
     if r.get("bench") == "soak":  # a soak-trajectory entry (no "arch")
         return (
             "soak", r.get("segments"), r.get("requests"),

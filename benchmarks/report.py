@@ -153,6 +153,44 @@ def prefix_table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+def spec_table(rows: list[dict]) -> str:
+    """Render ``benchmarks/spec_bench.py`` rows: per speculative A/B
+    cell, the acceptance rate (tokens per batched verify step), the
+    p50 TPOT before/after and the cut, and the two exactness verdicts
+    (byte-identical outputs, delta-counter replay)."""
+    lines = [
+        "| cell | arch | family | drafter | depth | sampling | accepted/step | draft tokens | verify steps | TPOT base ms | TPOT spec ms | cut | tokens exact | replay |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        # a merged jsonl interleaves other record shapes, and the spec
+        # *trajectory* entries share the bench tag but carry no cell
+        if r.get("bench") != "spec" or "cell" not in r:
+            continue
+        replay = r.get("replay_errors")
+        lines.append(
+            "| {cell} | {arch} | {fam} | {dr} | {d} | {samp} | "
+            "{aps:.2f} | {dt} | {vs} | {tb:.3f} | {ts:.3f} | {cut:.1%} | "
+            "{tok} | {rep} |".format(
+                cell=r["cell"], arch=r["arch"], fam=r.get("family", "—"),
+                dr=r["drafter"], d=r.get("depth", 0),
+                samp=r.get("sampling", "—"),
+                aps=r.get("accepted_per_step", 0.0),
+                dt=r.get("draft_tokens", 0),
+                vs=r.get("verify_steps", 0),
+                tb=r.get("tpot_base_ms", 0.0),
+                ts=r.get("tpot_spec_ms", 0.0),
+                cut=r.get("tpot_spec_cut", 0.0),
+                tok="yes" if r.get("identical") else "NO",
+                rep=(
+                    "—" if replay is None
+                    else ("clean" if not replay else f"{len(replay)} ERRORS")
+                ),
+            )
+        )
+    return "\n".join(lines)
+
+
 def soak_table(rows: list[dict]) -> str:
     """Render soak-trajectory entries (``BENCH_trajectory.json`` or a
     merged jsonl): one line per ``benchmarks/soak_bench.py`` run, so the
@@ -368,6 +406,8 @@ if __name__ == "__main__":
         print(prefix_table(load_prefix(path)))
     elif which == "soak":
         print(soak_table(load_soak(path)))
+    elif which == "spec":
+        print(spec_table(load_prefix(path)))  # same {"rows": ...} shape
     elif which == "moe":
         print(moe_table(load(path)))
     elif which == "spans":

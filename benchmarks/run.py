@@ -20,6 +20,7 @@ from benchmarks import (
     roofline_table,
     serve_bench,
     soak_bench,
+    spec_bench,
     table1_bnn_pynq,
     table2_rn50,
     table4_packing,
@@ -39,6 +40,7 @@ BENCHES = [
     ("fleet_bench (multi-engine fleet + disaggregated prefill/decode)",
      fleet_bench),
     ("prefix_bench (radix prefix cache vs cold KV pool)", prefix_bench),
+    ("spec_bench (speculative decode vs plain paged decode)", spec_bench),
     ("soak_bench (virtual-hour churn soak + tracker replay)", soak_bench),
 ]
 

@@ -6,7 +6,7 @@ invariants that only break under churn — leaked pool blocks after a
 drain, a stale chunk cursor, a refcount that drifts across thousands of
 adopt/release cycles, a tracker stream that stops adding up.
 
-One soak run drives two phases over the same JSONL tracker stream:
+One soak run drives four phases over the same JSONL tracker stream:
 
   phase 1 (fleet): a 2-engine prefix-aware ``FleetCluster`` serves
   ``n_segments`` bursts of traffic spread over ``span_s`` virtual
@@ -26,6 +26,14 @@ One soak run drives two phases over the same JSONL tracker stream:
   not bounce it) — and the ``expert_tokens`` seam counter must replay
   exactly from the stream.
 
+  phase 4 (speculative): a 2-engine fleet decodes a burst through the
+  packed-twin drafter with a mid-burst drain, so requeue churn rides
+  the draft-and-verify path. Draft blocks are transient within one
+  verify round — the probe asserts ``pool.draft_rids()`` is empty
+  between rounds and after the burst (nothing leaked by rollback), and
+  the ``accepted_tokens`` / ``draft_tokens`` / ``verify_steps``
+  counters must replay exactly from the stream.
+
 Invariants, probed every ``check_every`` engine rounds and at every
 phase end:
 
@@ -40,13 +48,13 @@ phase end:
     reproduces every engine's live summary counters exactly;
   * integrating the memory ledger's ``kind="mem"`` deltas over the
     *whole* stream (``memledger.validate_ledger``) reproduces every
-    round's pool gauges byte-exactly — all three phases, the mid-burst
+    round's pool gauges byte-exactly — all four phases, the mid-burst
     drain/restore churn, and the engine-id reuse across phase
     boundaries included;
   * the lifecycle spans in the same stream decompose *exactly*
     (``spans.validate_trace``): every completed request's phase spans
     tile [submit, done] with zero gaps, and its admit/first stamps sit
-    on span boundaries — probed per phase, since the three phases reuse
+    on span boundaries — probed per phase, since the four phases reuse
     request ids on one stream;
   * TTFT/TPOT percentiles stay inside a loose SLO band — measured
     submit-relative (arrival to first token), so queue wait counts
@@ -166,6 +174,12 @@ class _Probe:
             self.failures.append(  # pragma: no cover - failure path
                 f"engine {engine.engine_id}: leaked chunk lanes"
             )
+        leaked = sch.pool.draft_rids()
+        if leaked:  # pragma: no cover - failure path
+            self.failures.append(
+                f"engine {engine.engine_id}: draft blocks outlive "
+                f"their verify round: {sorted(leaked)}"
+            )
 
 
 def _span_check(records, label: str) -> list[str]:
@@ -200,7 +214,8 @@ def _replay_check(records, engines) -> list[str]:
         for k in (
             "completed", "handoffs", "prefill_steps", "prefill_tokens",
             "decode_steps", "generated_tokens", "prefix_hits",
-            "prefix_hit_tokens", "expert_tokens",
+            "prefix_hit_tokens", "expert_tokens", "accepted_tokens",
+            "draft_tokens", "verify_steps",
         ):
             if rep[k] != summ[k]:
                 errs.append(
@@ -222,7 +237,7 @@ def run_soak(
     check_every: int = 8,
     trace_out=None,
 ) -> dict:
-    """Run both phases; returns the summary dict (one trajectory entry)."""
+    """Run all four phases; returns the summary dict (one trajectory entry)."""
     import math
 
     import jax
@@ -422,11 +437,70 @@ def run_soak(
         moe_records = read_jsonl(trace_out)[n_disagg_lines:]
         errors.extend(_replay_check(moe_records, moe_cluster.engines))
         errors.extend(_span_check(moe_records, "moe spans"))
+    n_moe_lines = n_disagg_lines + (len(moe_records) if trace_out else 0)
+
+    # phase 4: speculative burst — the packed-twin drafter decodes over
+    # the paged pool while a mid-burst drain requeues engine 0's queue.
+    # Draft blocks are transient within one verify round; the probe and
+    # the post-burst check assert rollback returned every one, and the
+    # accepted/draft/verify counters must replay from the stream.
+    from repro.runtime.speculative import SpecConfig, resolve
+
+    spec4 = resolve(
+        cfg, SpecConfig(drafter="smollm_360m", depth=4, quant=2),
+        smoke=True,
+    )
+    sfresh = lambda k: rng.integers(0, cfg.vocab, size=(k,)).astype(
+        np.int32
+    )
+    spec0 = over + 1
+    spec_trace = [
+        ClientRequest(spec0 + i, 0.001 * i,
+                      sfresh(int(rng.integers(8, 17))),
+                      int(rng.choice((4, 8))), spec0 + i)
+        for i in range(requests_per_segment)
+    ]
+    spec_cluster = FleetCluster(
+        cfg, params, n_engines=2, slots=SLOTS, max_len=MAX_LEN,
+        block_tokens=BLOCK, cost=cost, speculative=spec4,
+        tracker=tracker, slo=soak_slo,
+    )
+    sres = spec_cluster.run(
+        spec_trace, drain_at=(0, 0.004), round_hook=probe
+    )
+    drains += 1
+    if len(sres.outputs) != len(spec_trace):
+        errors.append(
+            f"spec burst: {len(sres.outputs)}/{len(spec_trace)} completed"
+        )
+    spec_accepted = sum(
+        e.scheduler.stats.accepted_tokens for e in spec_cluster.engines
+    )
+    spec_verify = sum(
+        e.scheduler.stats.verify_steps for e in spec_cluster.engines
+    )
+    if spec_verify == 0 or spec_accepted == 0:
+        errors.append("spec burst never verified a draft chain")
+    for e in spec_cluster.engines:
+        try:
+            e.scheduler.pool.validate()
+        except AssertionError as exc:  # pragma: no cover - failure path
+            errors.append(f"spec burst engine {e.engine_id}: {exc}")
+        leaked = e.scheduler.pool.draft_rids()
+        if leaked:  # pragma: no cover - failure path
+            errors.append(
+                f"spec burst engine {e.engine_id}: leaked draft "
+                f"blocks for rids {sorted(leaked)}"
+            )
+    if trace_out:
+        spec_records = read_jsonl(trace_out)[n_moe_lines:]
+        errors.extend(_replay_check(spec_records, spec_cluster.engines))
+        errors.extend(_span_check(spec_records, "spec spans"))
     tracker.finish()
 
     # the memory-ledger conservation law, probed over the WHOLE stream:
     # integrating the kind="mem" deltas must land exactly on every
-    # round's pool gauges, across all three phases, the mid-burst
+    # round's pool gauges, across all four phases, the mid-burst
     # drain/restore churn, and the engine-id reuse at phase boundaries
     # (each phase's attach records reset the integration)
     mem_records = 0
@@ -474,29 +548,40 @@ def run_soak(
     return {
         "virtual_hours": round(clock_h, 3),
         "segments": n_segments,
-        "requests": rid0 + spec.n_requests + len(moe_trace),
-        "completed": slo.completed + len(dres.outputs) + len(mres.outputs),
+        "requests": rid0 + spec.n_requests + len(moe_trace)
+        + len(spec_trace),
+        "completed": slo.completed + len(dres.outputs) + len(mres.outputs)
+        + len(sres.outputs),
         "drains": drains,
         "followups": n_followups,
         "gen_reuse_hits": gen_reuse_hits,
         "handoffs": handoffs,
         "moe_requests": len(moe_trace),
         "moe_expert_tokens": moe_expert_tokens,
+        "spec_requests": len(spec_trace),
+        "spec_accepted_tokens": spec_accepted,
+        "spec_verify_steps": spec_verify,
         "generated_tokens": fleet_generated
         + sum(e.scheduler.stats.generated_tokens for e in disagg.engines)
         + sum(
             e.scheduler.stats.generated_tokens
             for e in moe_cluster.engines
+        )
+        + sum(
+            e.scheduler.stats.generated_tokens
+            for e in spec_cluster.engines
         ),
         "invariant_checks": probe.checks,
         "trace_records": (
             len(fleet_records) + len(disagg_records) + len(moe_records)
+            + len(spec_records)
             if trace_out else 0
         ),
         "span_records": (
             sum(
                 1
                 for r in fleet_records + disagg_records + moe_records
+                + spec_records
                 if r.get("kind") == "span"
             )
             if trace_out else 0
@@ -550,6 +635,8 @@ def check(rows: list[dict]) -> list[str]:
             errs.append("no generated-token prefix reuse observed")
         if r.get("moe_requests") and r.get("moe_expert_tokens", 0) == 0:
             errs.append("moe burst recorded no expert-routed tokens")
+        if r.get("spec_requests") and r.get("spec_accepted_tokens", 0) == 0:
+            errs.append("spec burst accepted no speculative tokens")
         if r.get("trace_records") and r.get("mem_records", 0) == 0:
             errs.append("trace stream carries no kind='mem' records")
     return errs

@@ -1,0 +1,306 @@
+"""Speculative-decoding benchmark: spec vs non-spec A/B on the fleet.
+
+Serves the same synthesized trace through a single-engine
+``FleetCluster`` twice — plain decode vs speculate-and-verify — and
+holds three reproduction bands:
+
+  * **token identity**: the speculative run's output streams are
+    byte-identical to plain decode, greedy AND seeded (the tentpole
+    invariant — verification samples each position with the same
+    (seed, rid, position) rng plain decode uses);
+  * **acceptance**: accepted tokens per verify step on the dense +
+    packed-drafter pair stays above the band (the drafter is earning
+    its rollout);
+  * **TPOT cut**: the virtual-clock p50 time-per-output-token drops by
+    at least the band on the dense + packed-drafter pair — the drafter
+    is charged at its own FCMP-discounted roofline
+    (``StepCostModel.for_config`` on the w_bits=2 twin), so the cut is
+    the honest roofline win, not a freebie.
+
+Drafter pairing: random smoke weights have no trained drafter/target
+correlation, so the dense target serves the *dequantized* FCMP params
+(``speculative.dequantize_ffn_params``) and the drafter re-packs them —
+a lossless twin, the smoke-scale stand-in for a trained dense model and
+its packed checkpoint (arXiv:2011.07317's pairing). The moe row drives
+the self-drafting ngram fallback instead (expert FFNs do not pack).
+
+The twin row also replays its tracker stream: the new
+``accepted_tokens`` / ``draft_tokens`` / ``verify_steps`` delta
+counters must integrate back to the engine totals exactly, and the
+span/ledger exactness contracts must hold with the new draft/verify
+phases in the timeline.
+
+CLI::
+
+    PYTHONPATH=src python benchmarks/spec_bench.py --smoke \
+        [--out spec_bench.json] [--no-trajectory]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import jax
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+DEPTH = 4
+QUANT = 2
+# bands (smoke cells, virtual clock — deterministic, so the margins are
+# against design drift, not timer noise): the lossless twin accepts
+# nearly the whole chain; ngram on random-weight moe still clears 1
+# token/step structurally (the pending token always lands)
+TWIN_ACCEPT_FLOOR = 3.0  # measured 3.5
+NGRAM_ACCEPT_FLOOR = 1.5  # measured 2.8
+TPOT_CUT_FLOOR = 0.30  # measured 0.457
+
+
+def _serve(cfg, full_cfg, params, *, sampling, speculative, trace_out=None):
+    from repro.runtime.cluster import (
+        FleetCluster,
+        SloPolicy,
+        StepCostModel,
+        TrafficSpec,
+        synthesize,
+    )
+
+    spec = TrafficSpec(
+        n_requests=8,
+        arrival_rate=2000.0,
+        session_reuse=0.0,
+        vocab=cfg.vocab,
+        seed=0,
+    )
+    trace = synthesize(spec)
+    tracker = None
+    if trace_out:
+        from repro.runtime.tracker import JsonlTracker
+
+        tracker = JsonlTracker(trace_out)
+    cluster = FleetCluster(
+        cfg,
+        params,
+        n_engines=1,
+        slots=4,
+        max_len=spec.max_total_tokens + 8,
+        block_tokens=4,
+        cost=StepCostModel.for_config(full_cfg, slots=4),
+        sampling=sampling,
+        prefix_cache=False,
+        speculative=speculative,
+        tracker=tracker,
+    )
+    result = cluster.run(trace)
+    if tracker is not None:
+        tracker.finish()
+    outputs = {}
+    for eng in cluster.engines:
+        for rid, req in eng.scheduler.requests.items():
+            outputs[rid] = list(req.output)
+        eng.scheduler.pool.validate()
+        assert not eng.scheduler.pool.draft_rids()
+    row = result.report(SloPolicy(ttft=0.05, tpot=0.01)).row()
+    return outputs, row, result.engine_summaries
+
+
+def _replay_checks(trace_out, summaries) -> list[str]:
+    """Span/ledger exactness + delta replay of the new counters."""
+    from repro.runtime.memledger import validate_ledger
+    from repro.runtime.spans import validate_trace
+    from repro.runtime.tracker import read_jsonl, replay_summary
+
+    recs = read_jsonl(trace_out)
+    errs = [f"span: {e}" for e in validate_trace(recs)]
+    errs += [f"ledger: {e}" for e in validate_ledger(recs)]
+    replay = replay_summary(recs)
+    for key in ("accepted_tokens", "draft_tokens", "verify_steps"):
+        want = sum(s[key] for s in summaries)
+        got = replay.get(key, 0)
+        if got != want:
+            errs.append(f"replay {key}: {got} != engine total {want}")
+    return errs
+
+
+def _cell(name, arch, drafter, *, sampling_kwargs, replay=False) -> dict:
+    from repro import configs
+    from repro.models import lm
+    from repro.runtime.speculative import (
+        SpecConfig,
+        dequantize_ffn_params,
+        resolve,
+    )
+
+    cfg = configs.get_smoke_config(arch)
+    full_cfg = configs.get_config(arch)
+    params = lm.init_params(cfg, jax.random.key(0))
+    if drafter != "ngram":
+        # the lossless-twin pairing (module docstring): target = the
+        # packed arch's dense execution, drafter = the re-packed twin
+        params = dequantize_ffn_params(params, QUANT)
+    sampling = lm.SamplingParams(**sampling_kwargs)
+    speculative = resolve(
+        cfg, SpecConfig(drafter=drafter, depth=DEPTH, quant=QUANT), smoke=True
+    )
+
+    base_out, base_row, _ = _serve(
+        cfg, full_cfg, params, sampling=sampling, speculative=None
+    )
+    trace_out = None
+    tmp = None
+    if replay:
+        tmp = tempfile.NamedTemporaryFile(
+            suffix=".jsonl", delete=False
+        )
+        tmp.close()
+        trace_out = tmp.name
+    try:
+        spec_out, spec_row, summaries = _serve(
+            cfg,
+            full_cfg,
+            params,
+            sampling=sampling,
+            speculative=speculative,
+            trace_out=trace_out,
+        )
+        replay_errs = (
+            _replay_checks(trace_out, summaries) if replay else []
+        )
+    finally:
+        if tmp is not None:
+            os.unlink(tmp.name)
+
+    accepted = sum(s["accepted_tokens"] for s in summaries)
+    verify = sum(s["verify_steps"] for s in summaries)
+    tpot_cut = (
+        1.0 - spec_row["tpot_p50"] / base_row["tpot_p50"]
+        if base_row["tpot_p50"]
+        else 0.0
+    )
+    return {
+        "bench": "spec",  # self-identify for merge_runs/report
+        "cell": name,
+        "arch": arch,
+        "family": cfg.family,
+        "drafter": drafter,
+        "depth": DEPTH,
+        "sampling": "greedy" if sampling.is_greedy else "seeded",
+        "identical": base_out == spec_out,
+        "accepted_tokens": accepted,
+        "draft_tokens": sum(s["draft_tokens"] for s in summaries),
+        "verify_steps": verify,
+        "accepted_per_step": round(accepted / verify, 4) if verify else 0.0,
+        "tpot_base_ms": round(base_row["tpot_p50"] * 1e3, 4),
+        "tpot_spec_ms": round(spec_row["tpot_p50"] * 1e3, 4),
+        "tpot_spec_cut": round(tpot_cut, 4),
+        "replay_errors": replay_errs if replay else None,
+    }
+
+
+def run() -> list[dict]:
+    return [
+        _cell(
+            "dense+twin/greedy",
+            "smollm_360m",
+            "smollm_360m",
+            sampling_kwargs={},
+            replay=True,
+        ),
+        _cell(
+            "dense+twin/seeded",
+            "smollm_360m",
+            "smollm_360m",
+            sampling_kwargs=dict(temperature=0.8, top_k=40, seed=5),
+        ),
+        _cell(
+            "moe+ngram/greedy",
+            "olmoe_1b_7b",
+            "ngram",
+            sampling_kwargs={},
+        ),
+    ]
+
+
+def check(rows: list[dict]) -> list[str]:
+    errs = []
+    by = {r["cell"]: r for r in rows}
+    for r in rows:
+        if not r["identical"]:
+            errs.append(
+                f"{r['cell']}: speculative output diverged from "
+                "non-speculative decode"
+            )
+        if r["replay_errors"]:
+            errs.extend(f"{r['cell']}: {e}" for e in r["replay_errors"])
+    twin = by.get("dense+twin/greedy")
+    if twin is None:
+        return errs + ["missing dense+twin/greedy cell"]
+    if twin["accepted_per_step"] < TWIN_ACCEPT_FLOOR:
+        errs.append(
+            f"twin acceptance {twin['accepted_per_step']:.2f} tokens/verify "
+            f"< {TWIN_ACCEPT_FLOOR}"
+        )
+    if twin["tpot_spec_cut"] < TPOT_CUT_FLOOR:
+        errs.append(
+            f"twin TPOT cut {twin['tpot_spec_cut']:.3f} < {TPOT_CUT_FLOOR}"
+        )
+    ngram = by.get("moe+ngram/greedy")
+    if ngram and ngram["accepted_per_step"] < NGRAM_ACCEPT_FLOOR:
+        errs.append(
+            f"ngram acceptance {ngram['accepted_per_step']:.2f} "
+            f"tokens/verify < {NGRAM_ACCEPT_FLOOR}"
+        )
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CPU cell (the only cell this bench runs)")
+    ap.add_argument("--out", default="spec_bench.json")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="do not append to BENCH_trajectory.json")
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        print("[spec_bench] only the reduced --smoke cell is implemented "
+              "(full-size serving needs real accelerators); pass --smoke")
+        return 2
+
+    rows = run()
+    errs = check(rows)
+    keys = list(rows[0])
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    for e in errs:
+        print(f"  BAND-CHECK FAIL: {e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "failures": errs}, f, indent=2)
+        print(f"[spec_bench] wrote {args.out}")
+    if not args.no_trajectory:
+        from benchmarks import trajectory
+
+        twin = rows[0]
+        entry = trajectory.append_run(
+            {
+                "ok": not errs,
+                "accepted_per_step": twin["accepted_per_step"],
+                "tpot_spec_cut": twin["tpot_spec_cut"],
+                "drafter": twin["drafter"],
+                "depth": twin["depth"],
+            },
+            bench="spec",
+        )
+        print(
+            f"[spec_bench] trajectory run #{entry['run_index']} -> "
+            f"{trajectory.TRAJECTORY_PATH}"
+        )
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -78,6 +78,14 @@ def build_parser() -> argparse.ArgumentParser:
                     help="TTFT SLO in virtual seconds")
     ap.add_argument("--slo-tpot", type=float, default=0.002,
                     help="per-token SLO in virtual seconds")
+    ap.add_argument("--speculate", default="",
+                    help="speculative decoding drafter per engine: 'ngram' "
+                         "or a canonical arch id whose packed twin drafts "
+                         "(dense/vlm/moe families)")
+    ap.add_argument("--spec-depth", type=int, default=4,
+                    help="draft chain depth k")
+    ap.add_argument("--spec-quant", type=int, default=2, choices=[1, 2],
+                    help="packed-carrier width of a model drafter's FFN")
     ap.add_argument("--quant", type=int, default=0, choices=[0, 1, 2])
     ap.add_argument("--json", default="", help="write the SLO report here")
     ap.add_argument("--trace-out", default="",
@@ -107,6 +115,21 @@ def build_cluster(cfg, full_cfg, params, args, spec):
         from repro.runtime.tracker import JsonlTracker
 
         tracker = JsonlTracker(args.trace_out)
+    speculative = None
+    if getattr(args, "speculate", ""):
+        from repro.runtime.speculative import SpecConfig, resolve
+
+        # resolved once (validation + cost config); each engine builds
+        # its own drafter instance from it
+        speculative = resolve(
+            cfg,
+            SpecConfig(
+                drafter=args.speculate,
+                depth=args.spec_depth,
+                quant=args.spec_quant,
+            ),
+            smoke=args.smoke,
+        )
     common = dict(
         slots=args.slots,
         max_len=max_len,
@@ -115,6 +138,7 @@ def build_cluster(cfg, full_cfg, params, args, spec):
         sampling=sampling,
         prefix_cache=args.prefix_cache
         and cfg.family in PREFIX_CACHE_FAMILIES,
+        speculative=speculative,
         tracker=tracker,
         trace_spans=getattr(args, "trace_spans", True),
         slo=SloPolicy(ttft=args.slo_ttft, tpot=args.slo_tpot),
@@ -254,6 +278,12 @@ def main(argv=None) -> int:
                 f"{s['shared_blocks_peak']} shared blocks peak, "
                 f"{s['cached_blocks']} cached)"
             )
+        if args.speculate and s.get("verify_steps"):
+            line += (
+                f", spec {s['accepted_per_step']:.2f} accepted/verify "
+                f"({s['accepted_tokens']} tokens / {s['verify_steps']} "
+                "steps)"
+            )
         mem = s.get("mem") or {}
         if mem:
             # peak snapshot: the drain-time report sees an empty pool
@@ -269,6 +299,8 @@ def main(argv=None) -> int:
             "mode": args.mode,
             "engines": n,
             "policy": args.policy,
+            "speculate": args.speculate,
+            "spec_depth": args.spec_depth if args.speculate else 0,
             "split": list(getattr(cluster, "split", ()) or ()),
             "report": r,
             "engine_summaries": result.engine_summaries,

@@ -99,6 +99,22 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
     # the ledger/metrics engine keys must agree for validate_ledger
     ledger = MemLedger(time.monotonic, tracker=tracker)
     mem_monitor = MemPressureMonitor()
+    speculator = None
+    if getattr(args, "speculate", ""):
+        from repro.runtime.speculative import SpecConfig, build_speculator
+
+        speculator = build_speculator(
+            cfg,
+            params,
+            SpecConfig(
+                drafter=args.speculate,
+                depth=args.spec_depth,
+                quant=args.spec_quant,
+            ),
+            slots=args.batch,
+            max_len=args.max_len,
+            smoke=args.smoke,
+        )
     return Scheduler(
         cfg,
         params,
@@ -116,6 +132,7 @@ def build_pool_engine(cfg, params, args) -> Scheduler:
         prefill_chunk=args.prefill_chunk or None,
         residency=build_residency_plan(cfg, args),
         prefix_cache=prefix_cache,
+        speculative=speculator,
         tracker=tracker,
         spans=spans,
         ledger=ledger,
@@ -158,6 +175,16 @@ def run_pool_engine(cfg, params, args) -> dict:
         "prefix_hit_rate": stats.prefix_hit_rate,
         "shared_blocks_peak": stats.shared_blocks_peak,
         "cached_blocks": sched.pool.cached_blocks,
+        "speculate": (
+            sched.speculative.name if sched.speculative is not None else ""
+        ),
+        "spec_depth": (
+            sched.speculative.depth if sched.speculative is not None else 0
+        ),
+        "accepted_tokens": stats.accepted_tokens,
+        "draft_tokens": stats.draft_tokens,
+        "verify_steps": stats.verify_steps,
+        "accepted_per_step": stats.accepted_per_step,
         "residency": (
             sched.residency.summary() if sched.residency is not None else None
         ),
@@ -303,6 +330,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="restrict sampling to the top-k logits; 0 = off")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass; 1.0 = off")
+    ap.add_argument("--speculate", default="",
+                    help="speculative decoding drafter: 'ngram' (self-"
+                         "drafting suffix match) or a canonical arch id "
+                         "whose packed twin drafts for the target "
+                         "(pool engine, dense/vlm/moe families)")
+    ap.add_argument("--spec-depth", type=int, default=4,
+                    help="draft chain depth k: each verify step scores "
+                         "the pending token plus k-1 proposals")
+    ap.add_argument("--spec-quant", type=int, default=2, choices=[1, 2],
+                    help="packed-carrier width of a model drafter's FFN "
+                         "(the twin's w_bits)")
     ap.add_argument("--quant", type=int, default=0, choices=[0, 1, 2],
                     help="serve with FCMP-packed 1/2-bit FFN weights "
                          "(inference-only carriers)")
@@ -350,6 +388,10 @@ def main(argv=None) -> int:
         print(f"[serve] --vmem-budget needs the pool engine's paged decode; "
               f"family {cfg.family!r} / --engine fixed cannot run budgeted")
         return 2
+    if args.speculate and engine == "fixed":
+        print(f"[serve] --speculate needs the pool engine's paged verify; "
+              f"family {cfg.family!r} / --engine fixed cannot speculate")
+        return 2
 
     params = lm.init_params(cfg, jax.random.key(args.seed))
     run = run_pool_engine if engine == "pool" else run_fixed_engine
@@ -369,6 +411,13 @@ def main(argv=None) -> int:
     if m["engine"] == "pool":
         line += f", pool utilization {m['pool_utilization']*100:.1f}%"
     print(line)
+    if m.get("speculate"):
+        print(
+            f"[serve/spec] drafter {m['speculate']} depth {m['spec_depth']}: "
+            f"{m['accepted_tokens']} tokens from {m['verify_steps']} verify "
+            f"steps ({m['accepted_per_step']:.2f} accepted/step, "
+            f"{m['draft_tokens']} drafted)"
+        )
     if m.get("prefix_cache"):
         print(
             f"[serve/prefix] {m['prefix_hits']} prefix hits, "

@@ -989,6 +989,77 @@ def prefill_chunk_paged(
     return lg, pks, pvs
 
 
+def verify_chunk_paged(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    pool_k: jnp.ndarray,
+    pool_v: jnp.ndarray,
+    row_table: jnp.ndarray,
+    write_rows: jnp.ndarray,
+    starts: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Score a depth-C draft chain per lane against the shared KV pool.
+
+    The speculative-decoding verifier (``runtime.speculative``): each lane
+    feeds its pending token plus the drafter's proposals as one chunk, so
+    the target scores every draft position in ONE batched step instead of
+    C sequential ``decode_step_paged`` calls. ``prefill_chunk_paged``
+    generalised two ways: ``starts`` is per-lane (B,) — decode lanes sit
+    at different depths — and the full (B, C, V) logits come back, because
+    longest-accepted-prefix selection needs the distribution at every
+    draft position, not just the last. K/V rows for the fed chain scatter
+    into the lanes' own (private, refcounted) blocks; rows past a lane's
+    accepted prefix are dead weight the next chain overwrites, which is
+    what makes rejection rollback free.
+
+    tokens: (B, C) draft chains, right-padded; write_rows: (B, C) physical
+    pool row per chain token (scratch row for padding); starts: (B,)
+    position of each lane's first fed token. Attention-KV families only —
+    moe included (dropless dispatch is chunk-invariant); the moe family
+    appends a per-layer expert-load tally (L, E).
+    """
+    if cfg.family not in ATTN_KV_FAMILIES:
+        raise ValueError(
+            f"verify_chunk_paged: unsupported family {cfg.family}"
+        )
+    moe = cfg.family == "moe"
+    x = embed(tokens, params["embed"], _dt(cfg))
+    b, c, _ = x.shape
+    positions = starts[:, None] + jnp.arange(c)[None, :]  # (B, C)
+
+    def layer_fn(carry, lp_kv):
+        x, aux = carry
+        lp, pk, pv = lp_kv
+        q, k, v = _qkv(lp, cfg, x, positions)
+        pk = pk.at[write_rows].set(k)
+        pv = pv.at[write_rows].set(v)
+        o = attn.chunk_attention(
+            q, pk[row_table], pv[row_table], positions,
+            window=cfg.sliding_window,
+        )
+        x = x + dense(o.reshape(b, c, -1), lp["wo"])
+        if moe:
+            x, counts = _ffn_block(lp, cfg, x, dropless=True)
+            return (x, aux), (pk, pv, counts)
+        x, a = _ffn_block(lp, cfg, x)
+        return (x, aux + a), (pk, pv)
+
+    (x, _), outs = jax.lax.scan(
+        layer_fn,
+        (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], pool_k, pool_v),
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    lg = unembed_logits(x, table, cfg.vocab)
+    if moe:
+        pks, pvs, counts = outs
+        return lg, pks, pvs, counts
+    pks, pvs = outs
+    return lg, pks, pvs
+
+
 # --------------------------------------------------------------------------
 # Hybrid (Zamba2) paged serving: shared-attention KV pages through the
 # pool, SSM conv/state stays resident per decode lane

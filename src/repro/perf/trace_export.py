@@ -15,8 +15,10 @@ https://ui.perfetto.dev and ``chrome://tracing`` open natively:
     request's next queue span on the new engine,
   * counter ("C") tracks per engine from the round records' gauges
     (pool utilization/occupancy, cached and shared blocks, queue depth,
-    active lanes, streamed HBM MiB/s from the cumulative residency
-    gauge) and from the memory ledger's ``kind="mem"`` reserve records
+    active lanes, per-round speculative accepted/draft tokens and
+    verify steps — lining the acceptance rate up under the
+    draft/verify spans, streamed HBM MiB/s from the cumulative
+    residency gauge) and from the memory ledger's ``kind="mem"`` reserve records
     (VMEM-resident bytes: weights pinned by the residency plan plus the
     expert stream ring).
 
@@ -142,6 +144,11 @@ def to_trace_events(records: Iterable[dict]) -> dict:
         "pool_shared_blocks",
         "queued",
         "active",
+        # speculative decode: per-round delta counters; viewed next to
+        # the draft/verify spans the first two read as acceptance rate
+        "accepted_tokens",
+        "draft_tokens",
+        "verify_steps",
     )
     streamed_prev: dict[int, tuple[float, float]] = {}  # pid -> (t, cum)
     # standalone round records carry no clock_s; the ledger flushes its

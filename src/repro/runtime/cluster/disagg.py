@@ -122,6 +122,7 @@ class DisaggCluster(FleetCluster):
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
+        speculative=None,
         tracker=None,
         trace_spans: bool = True,
         slo=None,
@@ -159,6 +160,7 @@ class DisaggCluster(FleetCluster):
             token_budget=token_budget,
             sampling=sampling,
             prefix_cache=prefix_cache,
+            speculative=speculative,
             tracker=tracker,
             trace_spans=trace_spans,
             slo=slo,

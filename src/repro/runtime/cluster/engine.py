@@ -116,6 +116,7 @@ class Engine:
         token_budget: int | None = None,
         sampling: SamplingParams | None = None,
         prefix_cache: bool = False,
+        speculative=None,
         tracker=None,
         trace_spans: bool = True,
         slo=None,
@@ -163,6 +164,25 @@ class Engine:
             role=role,
         )
         self.mem_monitor = MemPressureMonitor(mem_policy)
+        # speculative decoding (runtime.speculative.ResolvedSpec): each
+        # engine builds its own drafter (private lane KV), and the
+        # drafter's work is charged at its *own* roofline — a packed twin
+        # pays its FCMP-discounted weight sweep, ngram pays nothing —
+        # while a verify step pays one target weight sweep plus the
+        # chain's extra compute tokens
+        self.draft_cost: StepCostModel | None = None
+        spec = None
+        if speculative is not None and role != "prefill":
+            spec = speculative.build(
+                cfg,
+                params,
+                slots=slots,
+                max_len=max_len,
+            )
+            if speculative.draft_full_cfg is not None:
+                self.draft_cost = StepCostModel.for_config(
+                    speculative.draft_full_cfg, slots=slots
+                )
         self.scheduler = Scheduler(
             cfg,
             params,
@@ -173,6 +193,7 @@ class Engine:
             sampling=sampling,
             handoff=self._on_handoff if role == "prefill" else None,
             prefix_cache=cache,
+            speculative=spec,
             spans=self.spans,
             ledger=self.ledger,
             mem_monitor=self.mem_monitor,
@@ -232,7 +253,28 @@ class Engine:
             )
         elif op == "decode":
             self._vclock.advance(steps * self.cost.decode_s_per_step)
-        else:  # pragma: no cover - scheduler only charges these two
+        elif op == "draft":
+            # the drafter's own roofline: a prefill call carries tokens
+            # (prompt warm-up), a rollout carries only steps; an ngram
+            # drafter has no cost model and is free
+            dc = self.draft_cost
+            if dc is not None:
+                if tokens:
+                    self._vclock.advance(
+                        tokens * dc.prefill_s_per_token
+                        + steps * dc.prefill_s_per_step
+                    )
+                else:
+                    self._vclock.advance(steps * dc.decode_s_per_step)
+        elif op == "verify":
+            # one target weight sweep scores the whole chain (the win);
+            # ``tokens`` are the chain positions beyond one-per-lane,
+            # charged at the compute-bound prefill rate
+            self._vclock.advance(
+                steps * self.cost.decode_s_per_step
+                + tokens * self.cost.prefill_s_per_token
+            )
+        else:  # pragma: no cover - scheduler charges only these ops
             raise ValueError(f"unknown charge op {op!r}")
 
     # ---------------- load / admission ----------------
@@ -426,6 +468,10 @@ class Engine:
             "decode_steps": s.decode_steps,
             "generated_tokens": s.generated_tokens,
             "expert_tokens": s.expert_tokens,
+            "accepted_tokens": s.accepted_tokens,
+            "draft_tokens": s.draft_tokens,
+            "verify_steps": s.verify_steps,
+            "accepted_per_step": round(s.accepted_per_step, 4),
             "pool_utilization": round(s.steady_state_utilization, 4),
             "spans": self.spans.n_spans,
             "slo": self.slo_monitor.summary(now=self.clock),

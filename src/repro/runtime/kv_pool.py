@@ -192,6 +192,9 @@ class KVPool:
         self._held: dict[int, list[int]] = {}
         self._tokens: dict[int, int] = {}
         self._committed: dict[int, int] = {}
+        # open speculative brackets: rid -> blocks grown by begin_draft
+        # and not yet settled by end_draft (owner="draft" ledger class)
+        self._draft: dict[int, int] = {}
         self._refs: dict[int, int] = {}  # block -> live holders (+1 cached)
         self._cached: set[int] = set()  # blocks pinned by the prefix cache
         # incremental aggregates so the per-decode-step stats() read is
@@ -374,6 +377,66 @@ class KVPool:
                          (n_tokens - 1) // t + 1):
             self._count_use(held[idx], min(t, n_tokens - idx * t))
 
+    def begin_draft(self, rid: int, n_tokens: int) -> None:
+        """Grow the request's block list to cover a speculative draft
+        chain ending at row ``n_tokens``, without advancing the token
+        count. Draft rows land in the request's own (private) blocks, so
+        a rejected suffix needs no data movement to undo: ``end_draft``
+        returns the surplus blocks and the stale rows are overwritten by
+        the next chain. Blocks grown here are charged to the ``draft``
+        owner class in the ledger, distinct from committed request growth.
+        """
+        held = self._held[rid]
+        before = len(held)
+        while len(held) * self.block_tokens < n_tokens:
+            if len(held) >= self._committed[rid]:
+                raise RuntimeError(
+                    f"draft for request {rid} exceeds its "
+                    f"{self._committed[rid]}-block commitment"
+                )
+            b = self._pop_free()
+            self._add_user(b)
+            held.append(b)
+        grown = len(held) - before
+        if grown:
+            self._draft[rid] = self._draft.get(rid, 0) + grown
+            if self.ledger is not None:
+                self.ledger.record(
+                    "draft_grow", owner="draft", rid=rid, grown=grown
+                )
+
+    def end_draft(self, rid: int, n_tokens: int) -> None:
+        """Settle a draft chain at its accepted length: rows through
+        ``n_tokens`` become committed coverage (``note_tokens``); draft
+        blocks past the accepted prefix are released back to the free
+        list. Exactly inverts ``begin_draft`` when nothing is accepted
+        into the drafted blocks, so the ledger integrates to zero across
+        a fully-rejected chain."""
+        draft = self._draft.pop(rid, 0)
+        held = self._held[rid]
+        keep = max(self.blocks_for(n_tokens), len(held) - draft)
+        freed = 0
+        while len(held) > keep:
+            b = held.pop()
+            self._drop_user(b)
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
+                self.freed_blocks += 1
+            freed += 1
+        self.note_tokens(rid, n_tokens)
+        if self.ledger is not None and (draft or freed):
+            self.ledger.record(
+                "draft_end", owner="draft", rid=rid,
+                kept=draft - freed, freed=freed,
+            )
+
+    def draft_rids(self) -> tuple[int, ...]:
+        """Requests currently holding draft-class blocks (empty outside a
+        begin_draft/end_draft bracket — the soak leak probe)."""
+        return tuple(self._draft)
+
     def adopt_prefix(
         self,
         rid: int,
@@ -454,6 +517,7 @@ class KVPool:
                 self._free.append(b)
                 self.freed_blocks += 1
         del self._tokens[rid], self._committed[rid]
+        self._draft.pop(rid, None)
         if self.ledger is not None:
             self.ledger.record("release", owner="request", rid=rid)
 
@@ -613,13 +677,19 @@ class KVPool:
                 raise AssertionError(f"request {rid} holds a block twice")
             if self._tokens[rid] > len(bs) * self.block_tokens:
                 raise AssertionError(f"request {rid} overflows its blocks")
+        for rid, n in self._draft.items():
+            if rid not in self._held or n > len(self._held[rid]):
+                raise AssertionError(
+                    f"draft bracket for request {rid} out of sync"
+                )
         # incremental aggregates must equal a full recount
         used: dict[int, int] = {}
         t = self.block_tokens
         for rid, bs in self._held.items():
             for i, b in enumerate(bs):
                 r = min(t, max(0, self._tokens[rid] - i * t))
-                used[b] = max(used.get(b, 0), r)
+                if r:  # draft-grown blocks carry no committed rows yet
+                    used[b] = max(used.get(b, 0), r)
         if holders != self._users:
             raise AssertionError("per-block holder counts drifted")
         if used != {b: r for b, r in self._used.items()} or (

@@ -46,11 +46,13 @@ from repro.models.lm import (
     sample_logits,
 )
 from repro.runtime.kv_pool import KVPool
+from repro.runtime.speculative import SPEC_FAMILIES, LaneDraft
 from repro.runtime.steps import (
     make_chunk_prefill_step,
     make_hybrid_suffix_prefill_step,
     make_paged_serve_step,
     make_pool_prefill_step,
+    make_verify_step,
 )
 
 
@@ -73,6 +75,11 @@ def _jitted_decode(cfg: ModelConfig):
 @functools.lru_cache(maxsize=None)
 def _jitted_chunk_prefill(cfg: ModelConfig):
     return jax.jit(make_chunk_prefill_step(cfg), donate_argnums=(2, 3))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_verify(cfg: ModelConfig):
+    return jax.jit(make_verify_step(cfg), donate_argnums=(2, 3))
 
 
 @functools.lru_cache(maxsize=None)
@@ -164,6 +171,11 @@ class SchedulerStats:
     decode_steps: int = 0
     handoffs: int = 0
     expert_tokens: int = 0  # moe: routed (token, expert) slots, all layers
+    # speculative decode: tokens emitted by verify steps (1..k each),
+    # drafter proposals offered, and batched verify calls run
+    accepted_tokens: int = 0
+    draft_tokens: int = 0
+    verify_steps: int = 0
     rounds: int = 0
     ttfts: list[float] = dataclasses.field(default_factory=list)
     util_samples: list[float] = dataclasses.field(default_factory=list)
@@ -181,6 +193,14 @@ class SchedulerStats:
         (hit tokens / (hit tokens + prefilled tokens))."""
         total = self.prefix_hit_tokens + self.prefill_tokens
         return self.prefix_hit_tokens / total if total else 0.0
+
+    @property
+    def accepted_per_step(self) -> float:
+        """Mean tokens emitted per verify step (1.0 = no draft ever
+        accepted — speculative decode's whole win is this number)."""
+        if not self.verify_steps:
+            return 0.0
+        return self.accepted_tokens / self.verify_steps
 
     @property
     def steady_state_utilization(self) -> float:
@@ -211,6 +231,7 @@ class Scheduler:
         residency=None,
         handoff: Callable[[PrefillHandoff], None] | None = None,
         prefix_cache=None,
+        speculative=None,
         tracker=None,
         spans=None,
         ledger=None,
@@ -253,6 +274,18 @@ class Scheduler:
             if prefix_cache.pool is not pool:
                 raise ValueError("prefix cache must index this pool")
         self.prefix_cache = prefix_cache
+        # speculative decode (runtime.speculative.Speculator): a drafter
+        # proposes depth-k chains per decode lane; one batched verify
+        # call scores them against the pool and the longest accepted
+        # prefix lands — token-identical to plain decode because the
+        # verifier samples with the same (seed, rid, position) rng
+        if speculative is not None and cfg.family not in SPEC_FAMILIES:
+            raise ValueError(
+                f"speculative decoding covers {SPEC_FAMILIES}; family "
+                f"{cfg.family!r} has no draft-chain rollback path"
+            )
+        self.speculative = speculative
+        self._verify = _jitted_verify(cfg) if speculative is not None else None
         self._prefill = _jitted_prefill(cfg)
         # hybrid chunks through the carried-state suffix step below, not
         # the stateless attention chunk step
@@ -368,6 +401,9 @@ class Scheduler:
                 "pool_blocks": pool.usable_blocks,
                 "prefix_cache": prefix_cache is not None,
             }
+            if speculative is not None:
+                hp["speculate"] = speculative.name
+                hp["spec_depth"] = speculative.depth
             if residency is not None:
                 hp["residency"] = residency.summary()
             tracker.log_hyperparameters(hp)
@@ -561,8 +597,25 @@ class Scheduler:
         self._lengths[slot] = p
         self._row_table[slot] = self.pool.rows_of(req.rid, pad_to=self.s_max)
         self._table_dirty = True
+        if self.speculative is not None:
+            self._start_drafter(slot, req)
         if len(req.output) >= req.max_new_tokens:
             self._complete(slot)
+
+    def _start_drafter(self, slot: int, req: Request) -> None:
+        """Warm the drafter's lane for a request entering decode. A model
+        drafter prefills the prompt through its own weights (the target's
+        prefix-cache hits don't transfer), charged at the drafter's
+        roofline and attributed to a ``draft`` span."""
+        t0 = self.spans.now() if self.spans is not None else 0.0
+        tokens, steps = self.speculative.start_lane(slot, req.prompt)
+        if tokens or steps:
+            if self.charge is not None:
+                self.charge("draft", tokens=tokens, steps=steps)
+            if self.spans is not None:
+                self.spans.mark(
+                    req.rid, "draft", t0, self.spans.now(), tokens=tokens
+                )
 
     def _export_handoff(self, slot: int, req: Request) -> None:
         """Ship a prefilled request's KV (in block-id order) off-engine
@@ -659,6 +712,8 @@ class Scheduler:
             # the first token arrived with the payload: it becomes
             # client-visible the instant this engine adopts it
             self.spans.event("first", payload.rid, now)
+        if self.speculative is not None:
+            self._start_drafter(slot, req)
         if len(req.output) >= req.max_new_tokens:
             self._complete(slot)
         return True
@@ -891,6 +946,8 @@ class Scheduler:
         req = self.requests[rid]
         req._enter(RequestState.DONE)
         self._commit_generated(slot, req)
+        if self.speculative is not None:
+            self.speculative.release_lane(slot)
         self.pool.release(rid)
         self.active[slot] = None
         self._token[slot, 0] = 0
@@ -990,21 +1047,179 @@ class Scheduler:
             if len(req.output) >= req.max_new_tokens:
                 self._complete(i)
 
+    def _spec_step(self) -> None:
+        """One speculate-and-verify cycle over every decoding lane.
+
+        The drafter proposes up to ``depth - 1`` tokens per lane; ONE
+        batched ``verify_chunk_paged`` call then feeds each lane's
+        pending token plus its proposals at the lane's own offsets,
+        writing their KV rows and returning the target's logits at every
+        chain position. Sampling position ``m`` with the non-speculative
+        rng key (seed, rid, m) makes longest-accepted-prefix selection
+        deterministic — and the output token-identical to plain decode,
+        since each position's logits depend only on accepted tokens.
+        Rejected rows cost nothing: ``end_draft`` pops the surplus
+        blocks (owner="draft" in the ledger) and the stale rows are
+        overwritten by the next chain before any unmasked gather.
+        """
+        lanes = [
+            (i, rid)
+            for i, rid in enumerate(self.active)
+            if self._decoding(rid)
+        ]
+        if not lanes:
+            return
+        t0 = self.spans.now() if self.spans is not None else 0.0
+        views: list[LaneDraft] = []
+        k_eff: dict[int, int] = {}
+        for i, rid in lanes:
+            req = self.requests[rid]
+            # never draft past the request's commitment: the chain ends
+            # at row p + max_new - 1 at most, so begin_draft stays
+            # within the admitted block budget
+            k_eff[rid] = min(
+                self.speculative.depth,
+                req.max_new_tokens - len(req.output),
+            )
+            views.append(
+                LaneDraft(
+                    slot=i,
+                    rid=rid,
+                    pending=int(self._token[i, 0]),
+                    out_len=len(req.output),
+                    n_rows=int(self._lengths[i]),
+                    history=np.concatenate(
+                        [req.prompt, np.asarray(req.output, np.int32)]
+                    ),
+                )
+            )
+        kmax = max(k_eff.values())
+        props: dict[int, np.ndarray] = {}
+        if kmax > 1:
+            proposed, draft_steps = self.speculative.propose(
+                views, kmax, self.sampling
+            )
+            for v, row in zip(views, proposed):
+                props[v.rid] = row
+            self.stats.draft_tokens += sum(
+                k_eff[rid] - 1 for _, rid in lanes
+            )
+            if self.charge is not None and draft_steps:
+                self.charge("draft", steps=draft_steps)
+        t1 = self.spans.now() if self.spans is not None else t0
+        # room for every lane's chain rows: draft-class blocks, settled
+        # (or fully returned) by end_draft after acceptance
+        for i, rid in lanes:
+            before = self.pool.blocks_held(rid)
+            self.pool.begin_draft(rid, int(self._lengths[i]) + k_eff[rid])
+            if self.pool.blocks_held(rid) != before:
+                self._row_table[i] = self.pool.rows_of(
+                    rid, pad_to=self.s_max
+                )
+                self._table_dirty = True
+        if self._table_dirty:
+            self._row_table_dev = jnp.asarray(self._row_table)
+            self._table_dirty = False
+        scratch = int(self.pool.scratch_rows(1)[0])
+        tokens = np.zeros((self.slots, kmax), np.int32)
+        write_rows = np.full((self.slots, kmax), scratch, np.int32)
+        starts = np.zeros((self.slots,), np.int32)
+        for i, rid in lanes:
+            ke = k_eff[rid]
+            n = int(self._lengths[i])
+            tokens[i, 0] = self._token[i, 0]
+            if ke > 1:
+                tokens[i, 1:ke] = props[rid][: ke - 1]
+            write_rows[i, :ke] = self.pool.rows_of(rid)[n : n + ke]
+            starts[i] = n
+        out = self._verify(
+            self.params,
+            jnp.asarray(tokens),
+            self.pool.k,
+            self.pool.v,
+            self._row_table_dev,
+            jnp.asarray(write_rows),
+            jnp.asarray(starts),
+        )
+        if self.cfg.family == "moe":
+            logits, self.pool.k, self.pool.v, counts = out
+            self._note_expert_counts(counts)
+        else:
+            logits, self.pool.k, self.pool.v = out
+        self.stats.verify_steps += 1
+        if self.charge is not None:
+            # one weight sweep plus the chain's extra compute tokens
+            self.charge(
+                "verify",
+                steps=1,
+                tokens=sum(k_eff.values()) - len(lanes),
+            )
+        t2 = self.spans.now() if self.spans is not None else t0
+        if self.spans is not None:
+            for i, rid in lanes:
+                if kmax > 1:
+                    self.spans.mark(
+                        rid, "draft", t0, t1, tokens=k_eff[rid] - 1
+                    )
+                self.spans.mark(rid, "verify", t1, t2, depth=k_eff[rid])
+        rows = np.asarray(logits)
+        done_slots: list[int] = []
+        for i, rid in lanes:
+            req = self.requests[rid]
+            ke = k_eff[rid]
+            n0 = int(self._lengths[i])
+            accepted = 0
+            for j in range(ke):
+                nxt = self._sample_one(req, rows[i, j])
+                req.output.append(nxt)
+                accepted += 1
+                self._token[i, 0] = nxt
+                if j < ke - 1 and nxt != int(props[rid][j]):
+                    break  # correction token accepted, chain tail rejected
+            self.stats.accepted_tokens += accepted
+            self._lengths[i] = n0 + accepted
+            before = self.pool.blocks_held(rid)
+            self.pool.end_draft(rid, n0 + accepted)
+            if self.pool.blocks_held(rid) != before:
+                self._row_table[i] = self.pool.rows_of(
+                    rid, pad_to=self.s_max
+                )
+                self._table_dirty = True
+            self.speculative.accept(i, n0 + accepted)
+            if len(req.output) >= req.max_new_tokens:
+                done_slots.append(i)
+        # sample pool pressure with every accept settled but finished
+        # requests still resident (the decode-step analog)
+        pool_st = self.pool.stats()
+        self.stats.shared_blocks_peak = max(
+            self.stats.shared_blocks_peak, pool_st.shared_blocks
+        )
+        self.stats.util_samples_any.append(pool_st.utilization)
+        if all(r is not None for r in self.active):
+            self.stats.util_samples.append(pool_st.utilization)
+        for i in done_slots:
+            self._complete(i)
+
     # ---------------- main loop ----------------
 
     def round(self) -> None:
         """One scheduler round: drain admissions, advance one chunk of any
-        mid-prefill long prompt, then R_F decode steps."""
+        mid-prefill long prompt, then R_F decode steps (speculate-and-
+        verify cycles when a drafter is installed)."""
         while self._admit_one():
             pass
         for i, rid in enumerate(self.active):
             if rid is not None and rid in self._chunk_cursor:
                 self._prefill_one_chunk(i)
+        step = (
+            self._spec_step if self.speculative is not None
+            else self._decode_step
+        )
         t0 = time.monotonic()
         for _ in range(self.decode_per_round):
             if not any(self._decoding(r) for r in self.active):
                 break
-            self._decode_step()
+            step()
         self.stats.decode_time += time.monotonic() - t0
         if self.spans is not None and self._decode_open:
             # close still-running lanes' slices at the round's decode end

@@ -57,6 +57,8 @@ SPAN_PHASES = (
     "queue",
     "prefix_lookup",
     "prefill",
+    "draft",  # speculative: drafter prefill / chain proposal
+    "verify",  # speculative: batched target verification of the chain
     "decode",
     "handoff",
     "wait",

@@ -178,6 +178,26 @@ def make_chunk_prefill_step(cfg: ModelConfig) -> Callable:
     return step
 
 
+def make_verify_step(cfg: ModelConfig) -> Callable:
+    """Batched draft-chain verification against the pool (speculative).
+
+    (params, tokens (B, C), pool_k, pool_v, row_table (B, S_max),
+    write_rows (B, C), starts (B,)) -> (full logits (B, C, V), new
+    pool_k, new pool_v). One call scores every lane's pending token plus
+    its drafter proposals at per-lane offsets; ``runtime.speculative``
+    turns the returned distributions into a longest-accepted prefix. Jit
+    with ``donate_argnums=(2, 3)`` so the pool updates in place.
+    """
+
+    def step(params, tokens, pool_k, pool_v, row_table, write_rows, starts):
+        return lm.verify_chunk_paged(
+            params, cfg, tokens, pool_k, pool_v, row_table, write_rows,
+            starts,
+        )
+
+    return step
+
+
 def make_hybrid_suffix_prefill_step(cfg: ModelConfig) -> Callable:
     """Hybrid prompt-suffix prefill resuming from carried SSM state.
 

@@ -238,6 +238,9 @@ DELTA_KEYS = (
     "prefix_hits",
     "prefix_hit_tokens",
     "expert_tokens",
+    "accepted_tokens",
+    "draft_tokens",
+    "verify_steps",
 )
 
 # SchedulerStats fields that are deliberately NOT replayed as deltas:
